@@ -1,0 +1,89 @@
+"""MODEL_FLOPS for the roofline: 6·N·D (train) / 2·N·D (inference), with
+N_active for MoE archs (routed experts counted at (top_k + shared)/E)."""
+from __future__ import annotations
+
+import jax
+
+from repro.configs import get_config
+from repro.models import lm
+
+
+def _param_split(cfg):
+    """(embedding_params, expert_params, other_params) from the abstract tree."""
+    abs_p = lm.abstract_params(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(abs_p)[0]
+    emb = exp = other = 0
+    for path, leaf in flat:
+        keys = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        ps = "/".join(keys)
+        n = leaf.size
+        if keys[0] in ("embed", "head"):
+            emb += n
+        elif "ffn" in keys and keys[-1] in ("wg", "wi", "wo") and len(leaf.shape) >= 3 and "shared" not in keys:
+            exp += n
+        else:
+            other += n
+    return emb, exp, other
+
+
+def active_params(arch: str) -> dict:
+    cfg = get_config(arch)
+    emb, exp, other = _param_split(cfg)
+    total = emb + exp + other
+    if cfg.moe is not None:
+        frac = (cfg.moe.top_k + cfg.moe.n_shared) / (
+            cfg.moe.n_experts + cfg.moe.n_shared
+        )
+        active = other + exp * frac
+    else:
+        active = other + exp
+    return {"total": total, "active_nonembed": active, "embed": emb, "expert": exp}
+
+
+def model_flops(arch: str, shape: dict) -> float:
+    """Global model FLOPs for one step of the given shape cell."""
+    p = active_params(arch)
+    N = p["active_nonembed"]
+    if shape["kind"] == "train":
+        D = shape["batch"] * shape["seq"]
+        return 6.0 * N * D
+    if shape["kind"] == "prefill":
+        D = shape["batch"] * shape["seq"]
+        return 2.0 * N * D
+    # decode: one token per sequence.
+    D = shape["batch"]
+    return 2.0 * N * D
+
+
+def _cache_bytes(arch: str, shape: dict) -> int:
+    import jax
+
+    from repro.models import lm
+
+    cfg = get_config(arch)
+    cache = jax.eval_shape(lambda: lm.init_cache(cfg, shape["batch"], shape["seq"]))
+    return sum(l.size * l.dtype.itemsize for l in jax.tree_util.tree_leaves(cache))
+
+
+def model_min_bytes(arch: str, shape: dict) -> float:
+    """Physics lower bound on global HBM traffic for one step: every live
+    byte touched at least once (weights / optimizer / activations / caches).
+
+    train   : params r+w (bf16) + grads w+r (f32) + moments r+w (f32 x2)
+              + remat'd layer activations (~3 passes over B·S·d·L bf16)
+    prefill : active params read + cache write + 2 activation passes
+    decode  : active params read + cache read(+write of 1 token ~ 0)
+    """
+    p = active_params(arch)
+    cfg = get_config(arch)
+    N_tot, N_act = p["total"], p["active_nonembed"] + 0.2 * p["embed"]
+    L, d = cfg.n_layers, cfg.d_model
+    if shape["kind"] == "train":
+        tokens = shape["batch"] * shape["seq"]
+        act = 3 * L * tokens * d * 2
+        return 2 * 2 * N_tot + (4 + 4) * N_tot + 2 * 4 * N_tot + act
+    cache = _cache_bytes(arch, shape)
+    if shape["kind"] == "prefill":
+        tokens = shape["batch"] * shape["seq"]
+        return 2 * N_act + cache + 2 * L * tokens * d * 2
+    return 2 * N_act + cache

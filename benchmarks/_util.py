@@ -1,0 +1,26 @@
+"""Shared benchmark utilities: timing, CSV rows, result persistence."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/bench")
+
+
+def save_rows(name: str, rows):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1, default=float)
+    return path
+
+
+def timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6  # microseconds
+
+
+def fmt_csv(name: str, us: float, derived) -> str:
+    return f"{name},{us:.0f},{derived}"

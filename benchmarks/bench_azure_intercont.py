@@ -1,0 +1,58 @@
+"""E3 — GCP<->Azure transfers (Fig. 8) + inter-continental colocation
+placement (Fig. 9).
+
+Fig. 9 scenario: a Paris (GCP) sender broadcasts to AWS regions across Europe
+and the US; the CCI colocation is either near (Paris) or far (Ohio) — far
+placement routes traffic over the sender's inter-continental backbone first,
+raising the CCI per-GB rate. Derived headline: ToggleCCI cost / best-static
+in the far-colocation case (<= ~1 means it tracks the best choice).
+"""
+from __future__ import annotations
+
+from repro.core.baselines import BASELINES
+from repro.core.costmodel import evaluate_schedule, hourly_cost_series
+from repro.core.pricing import make_scenario
+from repro.core.togglecci import run_togglecci
+from repro.traffic.mirage import mirage_trace
+
+from ._util import save_rows
+
+USER_COUNTS = (1_000, 10_000, 50_000, 100_000)
+
+
+def _eval_all(params, demand):
+    costs = hourly_cost_series(params, demand)
+    out = {
+        name: evaluate_schedule(params, demand, fn(params, demand), costs=costs)
+        for name, fn in BASELINES.items()
+    }
+    out["togglecci"] = run_togglecci(params, demand, costs=costs).total_cost
+    return out
+
+
+def run(horizon_days: int = 365):
+    rows = []
+    # Fig. 8: GCP<->Azure, both directions.
+    for src, dst in (("gcp", "azure"), ("azure", "gcp")):
+        params = make_scenario(src, dst)
+        for k in USER_COUNTS:
+            demand = mirage_trace(k, horizon_days=horizon_days, n_pairs=4, seed=k)
+            out = _eval_all(params, demand)
+            rows.append({"figure": "fig8", "setting": f"{src}->{dst}", "users": k,
+                         **{f"cost_{n}": v for n, v in out.items()}})
+
+    # Fig. 9: inter-continental broadcast, near vs far colocation.
+    derived = ""
+    for placement, far in (("colo_near_paris", False), ("colo_far_ohio", True)):
+        params = make_scenario("gcp", "aws", colocation_far=far)
+        for k in USER_COUNTS:
+            demand = mirage_trace(k, horizon_days=horizon_days, n_pairs=6, seed=999 + k)
+            out = _eval_all(params, demand)
+            best_static = min(out["always_vpn"], out["always_cci"])
+            rows.append({"figure": "fig9", "setting": placement, "users": k,
+                         "toggle_over_beststatic": out["togglecci"] / best_static,
+                         **{f"cost_{n}": v for n, v in out.items()}})
+            if far and k == USER_COUNTS[-1]:
+                derived = f"far_colo_toggle_over_static={out['togglecci']/best_static:.3f}"
+    save_rows("azure_intercont", rows)
+    return rows, derived

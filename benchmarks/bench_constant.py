@@ -1,0 +1,41 @@
+"""E5 — constant-rate trace (Fig. 11): total cost vs rate around the
+VPN/CCI breakeven. ToggleCCI must track the lower envelope (Property 1),
+missing only the first D hours on the CCI side, and stay conservative just
+below breakeven (θ1 = 0.9). Derived headline: max ToggleCCI/min(static)
+across the sweep."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.baselines import BASELINES
+from repro.core.costmodel import evaluate_schedule, hourly_cost_series
+from repro.core.oracle import offline_optimal
+from repro.core.pricing import breakeven_rate_gb_per_hour, make_scenario
+from repro.core.togglecci import run_togglecci
+from repro.traffic.traces import constant_trace
+
+from ._util import save_rows
+
+SCALES = (0.2, 0.5, 0.8, 0.95, 1.0, 1.05, 1.2, 1.5, 2.0, 3.0)
+
+
+def run(horizon: int = 8760):
+    params = make_scenario("gcp", "aws")
+    be = breakeven_rate_gb_per_hour(params)
+    rows, worst = [], 0.0
+    for s in SCALES:
+        demand = constant_trace(s * be, horizon=horizon)
+        costs = hourly_cost_series(params, demand)
+        out = {
+            name: evaluate_schedule(params, demand, fn(params, demand), costs=costs)
+            for name, fn in BASELINES.items()
+        }
+        res = run_togglecci(params, demand, costs=costs)
+        out["togglecci"] = res.total_cost
+        out["oracle"] = offline_optimal(params, costs=costs).total_cost
+        best_static = min(out["always_vpn"], out["always_cci"])
+        worst = max(worst, out["togglecci"] / best_static)
+        rows.append({"rate_scale": s, "rate_gb_hr": s * be,
+                     **{f"cost_{n}": v for n, v in out.items()}})
+    save_rows("constant", rows)
+    return rows, f"max_toggle_over_beststatic={worst:.3f}"

@@ -1,0 +1,79 @@
+"""E12 — planner-in-the-loop: the paper's controller driving the framework's
+cross-pod interconnect.
+
+Demand comes from the dry-run telemetry when available (cross-pod wire bytes
+per train step of the multi-pod cells), modulated by a realistic cluster load
+profile (diurnal job mix + idle nights + burst campaigns). The planner picks
+per-hour between the leased DCI (full-precision hierarchical all-reduce) and
+the pay-per-GB path (int8-compressed collectives). Derived headline: planner
+cost / min(static policies)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import numpy as np
+
+from repro.core.planner import InterconnectPlanner, cross_pod_bytes_per_step
+
+from ._util import save_rows
+
+STEPS_PER_HOUR = 3600 / 8.0  # ~8 s/step at this scale
+
+
+def _bytes_per_step_from_dryrun() -> dict:
+    out = {}
+    for path in glob.glob("results/dryrun/*__train_4k__multi.json"):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        wire = rec["collectives"]["total_wire_bytes"]
+        # cross-pod share: collectives spanning the pod axis; estimate via the
+        # planner helper on a conservative 1/pod share of global wire bytes.
+        out[rec["arch"]] = wire / 2  # per-device wire; DCI carries pod-crossing half
+    return out
+
+
+def _load_profile(hours: int, rng) -> np.ndarray:
+    """Fraction of the cluster training at each hour (diurnal + campaigns)."""
+    t = np.arange(hours)
+    diurnal = 0.55 + 0.35 * np.sin(2 * np.pi * ((t % 24) - 8) / 24).clip(-1, 1)
+    campaign = np.zeros(hours)
+    k = 0
+    while k < hours:
+        k += int(rng.exponential(24 * 14))
+        dur = int(rng.normal(24 * 5, 24))
+        campaign[k : k + max(dur, 0)] = 0.4
+        k += max(dur, 0)
+    return (diurnal + campaign).clip(0.05, 1.0)
+
+
+def run(hours: int = 8760):
+    rng = np.random.default_rng(0)
+    per_arch = _bytes_per_step_from_dryrun()
+    # Fallback if the dry-run table isn't built yet.
+    base_bytes = per_arch.get("mixtral-8x7b", 2.5e9)
+    profile = _load_profile(hours, rng)
+    hourly_bytes = base_bytes * STEPS_PER_HOUR * profile * 512  # fleet-wide
+
+    pl = InterconnectPlanner()
+    modes = []
+    for h in range(hours):
+        modes.append(pl.feed_hour(float(hourly_bytes[h])))
+    rep = pl.report()
+    rows = [{
+        "hours": rep.hours,
+        "planner_cost": rep.total_cost,
+        "always_vpn_compressed": rep.cost_always_vpn,
+        "always_cci": rep.cost_always_cci,
+        "on_fraction": rep.on_fraction,
+        "requests": rep.requests[:20],
+        "releases": rep.releases[:20],
+        "total_pb": rep.total_gb / 1e6,
+        "bytes_per_step_source": sorted(per_arch) or ["default"],
+    }]
+    save_rows("planner", rows)
+    best = min(rep.cost_always_vpn, rep.cost_always_cci)
+    return rows, f"planner_over_beststatic={rep.total_cost/best:.3f}"

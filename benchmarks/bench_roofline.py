@@ -1,0 +1,110 @@
+"""E10 — roofline analysis (§Roofline of EXPERIMENTS.md).
+
+Reads the dry-run records (results/dryrun/*.json) and derives, per
+(arch x shape x mesh):
+
+    compute term    = HLO_FLOPs / (chips x 197e12 FLOP/s)      [bf16 v5e]
+    memory term     = HLO_bytes / (chips x 819e9 B/s)          [HBM]
+    collective term = collective_bytes / (chips x 50e9 B/s)    [ICI link]
+
+(all per-device HLO numbers already divide by `chips`; the formulas below use
+them directly), the dominant term, MODEL_FLOPS = 6·N_active·D, and the
+usefulness ratio MODEL_FLOPS / (HLO_FLOPs x chips). Derived headline: count
+of cells whose dominant term is compute (the "good" state)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from ._model_flops import model_flops, model_min_bytes
+from ._util import save_rows
+
+PEAK_FLOPS = 197e12     # bf16 per chip
+HBM_BW = 819e9          # B/s per chip
+LINK_BW = 50e9          # B/s per ICI link
+
+SHAPES = {
+    "train_4k": {"kind": "train", "seq": 4096, "batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq": 32768, "batch": 32},
+    "decode_32k": {"kind": "decode", "seq": 32768, "batch": 128},
+    "long_500k": {"kind": "decode", "seq": 524288, "batch": 1},
+}
+
+
+def analyze_record(rec: dict) -> dict:
+    chips = rec["chips"]
+    flops_dev = rec["hlo_flops_per_device"]
+    bytes_dev = rec["hlo_bytes_per_device"]
+    coll_dev = rec["collectives"]["total_wire_bytes"]
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    mf = model_flops(rec["arch"], SHAPES[rec["shape"]])
+    mb = model_min_bytes(rec["arch"], SHAPES[rec["shape"]])
+    useful = mf / max(1.0, flops_dev * chips)
+    # Roofline fraction = (physics lower bound on step time) / (modeled step
+    # time of the compiled program). The lower bound is the max of the ideal
+    # compute and ideal memory terms; the model has no mandatory collectives,
+    # so the bound's collective term is 0. 1.0 = compiled program sits ON the
+    # machine roofline for this workload.
+    t_model = max(mf / chips / PEAK_FLOPS, mb / chips / HBM_BW)
+    t_bound = max(t_compute, t_memory, t_coll)
+    frac = t_model / t_bound if t_bound > 0 else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "status": rec.get("status"),
+        "compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "model_min_bytes": mb,
+        "model_bound_s": t_model,
+        "useful_ratio": useful,
+        "roofline_fraction": frac,
+        "peak_gib_per_device": rec.get("memory", {}).get("peak_estimate_bytes", 0) / 2**30,
+    }
+
+
+def run(dryrun_dir: str = "results/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") == "ok":
+            rows.append(analyze_record(rec))
+        else:
+            rows.append({
+                "arch": rec.get("arch"), "shape": rec.get("shape"),
+                "mesh": rec.get("mesh"), "status": rec.get("status"),
+                "reason": rec.get("reason", rec.get("error", "")),
+            })
+    save_rows("roofline", rows)
+    ok = [r for r in rows if r.get("status") == "ok"]
+    ncomp = sum(1 for r in ok if r["dominant"] == "compute")
+    return rows, f"compute_bound_cells={ncomp}/{len(ok)}"
+
+
+def table(rows) -> str:
+    """Markdown table for EXPERIMENTS.md §Roofline."""
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | useful | roofline frac | peak GiB/dev |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        if r.get("status") != "ok":
+            lines.append(
+                f"| {r.get('arch')} | {r.get('shape')} | {r.get('mesh')} | "
+                f"{r.get('status')}: {str(r.get('reason'))[:40]} |" + " |" * 6
+            )
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.4f} | {r['memory_s']:.4f} | {r['collective_s']:.4f} "
+            f"| **{r['dominant']}** | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} | {r['peak_gib_per_device']:.1f} |"
+        )
+    return "\n".join(lines)

@@ -1,0 +1,90 @@
+"""E7 — sensitivity analyses (Figs. 13, 14).
+
+Fig. 13(a): burst duration sweep at one burst/month — ToggleCCI loses to VPN
+for durations << D + T_cci, wins beyond.
+Fig. 13(b): inter-burst interval sweep at 7-day bursts.
+Fig. 14: provisioning-delay D sweep under (a) high traffic and (b) breakeven
+traffic. Derived headline: D* = largest delay at which ToggleCCI still beats
+both statics at breakeven (paper: robust to long delays there)."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.baselines import BASELINES
+from repro.core.costmodel import evaluate_schedule, hourly_cost_series
+from repro.core.pricing import breakeven_rate_gb_per_hour, make_scenario
+from repro.core.togglecci import run_togglecci_scan
+from repro.traffic.traces import bursty_trace, constant_trace
+
+from ._util import save_rows
+
+REPEATS = 10
+
+
+def _mean_costs(params, demands):
+    costs = [hourly_cost_series(params, d) for d in demands]
+    vpn = jnp.asarray(np.stack([c.vpn for c in costs]), jnp.float32)
+    cci = jnp.asarray(np.stack([c.cci for c in costs]), jnp.float32)
+    toggle = np.asarray(
+        jax.vmap(lambda v, c: run_togglecci_scan(params, v, c)["total_cost"])(vpn, cci)
+    ).mean()
+    out = {"togglecci": float(toggle)}
+    for name, fn in BASELINES.items():
+        out[name] = float(np.mean([
+            evaluate_schedule(params, d, fn(params, d), costs=c)
+            for d, c in zip(demands, costs)
+        ]))
+    return out
+
+
+def run(horizon: int = 8760):
+    params = make_scenario("gcp", "aws")
+    rows = []
+
+    # Fig. 13a: duration sweep, one burst/month.
+    for dur_days in (1, 3, 5, 7, 14, 28):
+        demands = [
+            bursty_trace(horizon=horizon, mean_duration_hr=dur_days * 24,
+                         std_duration_hr=dur_days * 6, seed=r).sum(axis=1)
+            for r in range(REPEATS)
+        ]
+        out = _mean_costs(params, demands)
+        rows.append({"figure": "fig13a", "burst_days": dur_days,
+                     **{f"cost_{n}": v for n, v in out.items()}})
+
+    # Fig. 13b: inter-burst interval sweep, 7-day bursts.
+    for gap_days in (7, 14, 21, 30, 60, 120):
+        demands = [
+            bursty_trace(horizon=horizon, arrival_rate_per_hr=1.0 / (gap_days * 24),
+                         seed=100 + r).sum(axis=1)
+            for r in range(REPEATS)
+        ]
+        out = _mean_costs(params, demands)
+        rows.append({"figure": "fig13b", "interburst_days": gap_days,
+                     **{f"cost_{n}": v for n, v in out.items()}})
+
+    # Fig. 14: provisioning delay sweep.
+    be = breakeven_rate_gb_per_hour(params)
+    d_star = 0
+    for regime, rate in (("high", 10 * be), ("breakeven", 1.0 * be)):
+        for D in (6, 24, 72, 168, 336, 672):
+            p = dataclasses.replace(params, D=D)
+            demands = [
+                bursty_trace(horizon=horizon, mean_intensity_gb_hr=rate,
+                             seed=200 + r).sum(axis=1)
+                for r in range(REPEATS)
+            ]
+            out = _mean_costs(p, demands)
+            best_static = min(out["always_vpn"], out["always_cci"])
+            rows.append({"figure": "fig14", "regime": regime, "delay_hr": D,
+                         "toggle_over_beststatic": out["togglecci"] / best_static,
+                         **{f"cost_{n}": v for n, v in out.items()}})
+            if regime == "breakeven" and out["togglecci"] <= best_static * 1.0:
+                d_star = max(d_star, D)
+    save_rows("sensitivity", rows)
+    return rows, f"breakeven_D_star_hr={d_star}"

@@ -1,0 +1,50 @@
+"""Serving demo: batched prefill + greedy decode through the public API
+(the same prefill/decode_step the dry-run lowers at 32k/500k scale).
+
+Run:  PYTHONPATH=src python examples/serve_demo.py [--arch tinyllama-1.1b]
+"""
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, reduce_config
+from repro.models import lm
+from repro.train.serve import greedy_generate
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b", choices=list(ARCH_IDS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = reduce_config(get_config(args.arch), d_model=128, vocab=1024)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)
+    kw = {}
+    if cfg.n_patches:
+        kw["patch_embeds"] = jax.random.normal(key, (args.batch, cfg.n_patches, cfg.d_model))
+    if cfg.encoder_layers:
+        kw["frames"] = jax.random.normal(key, (args.batch, cfg.encoder_frames, cfg.d_model))
+
+    t0 = time.time()
+    out = greedy_generate(cfg, params, prompts, args.max_new, **kw)
+    dt = time.time() - t0
+    toks = args.batch * args.max_new
+    print(f"arch={args.arch} (reduced) generated {toks} tokens "
+          f"in {dt:.2f}s ({toks/dt:.1f} tok/s incl. compile)")
+    print("first sequence:", np.asarray(out[0]).tolist())
+    assert out.shape == (args.batch, args.max_new)
+    assert not np.isnan(np.asarray(out)).any()
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""The paper's contribution: CCI/VPN cost model, ToggleCCI, and theory.
+
+Public API:
+    pricing.CostParams / make_scenario / TieredRate / breakeven_rate_gb_per_hour
+    costmodel.hourly_cost_series / evaluate_schedule / cost_breakdown
+    togglecci.run_togglecci / run_togglecci_scan
+    baselines.BASELINES / evaluate_all
+    oracle.offline_optimal / best_static
+    adversary.instance_for_ratio / competitive_ratio
+    planner.InterconnectPlanner (framework integration; see repro.dist)
+"""
+from .pricing import (  # noqa: F401
+    CostParams,
+    TieredRate,
+    breakeven_rate_gb_per_hour,
+    flat_rate,
+    make_scenario,
+)
+from .costmodel import (  # noqa: F401
+    HourlyCosts,
+    cost_breakdown,
+    evaluate_schedule,
+    hourly_cost_series,
+    hourly_cost_series_jnp,
+)
+from .togglecci import ToggleResult, run_togglecci, run_togglecci_scan  # noqa: F401
+from .baselines import BASELINES, evaluate_all  # noqa: F401
+from .oracle import best_static, offline_optimal  # noqa: F401
+from .adversary import competitive_ratio, instance_for_ratio  # noqa: F401

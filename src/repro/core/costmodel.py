@@ -1,0 +1,186 @@
+"""The paper's cost model — Eq. (1)/(2) of §V.
+
+Given an hourly demand matrix ``d[t, p]`` (GB transferred by pair ``p`` during
+hour ``t``) and a CCI-activation schedule ``x[t] ∈ {0, 1}``, the total cost is
+
+    Σ_t [ x_t · ( L_CCI + Σ_p ( V_CCI + c_CCI · d_{p,t} ) )
+        + (1-x_t) · Σ_p ( L_VPN + c_VPN(p,t) · d_{p,t} ) ]
+
+where ``c_VPN(p, t)`` is the tiered per-GB rate given pair ``p``'s cumulative
+volume since the start of the month (paper assumption: tiers accumulate
+per-pair and reset every ``hours_per_month`` hours).
+
+Tier-state convention (documented in DESIGN.md §6): the cumulative volume used
+for the tier lookup is the *all-VPN counterfactual* volume — i.e. tiers advance
+with total demand regardless of the schedule. This makes per-hour VPN cost an
+exogenous series (exact when the schedule is all-VPN; the approximation is
+conservative *against* VPN otherwise, since real mixed schedules would sit in
+earlier, more expensive tiers) and is what both ToggleCCI's window costs and
+the offline DP oracle consume.
+
+Two implementations with identical semantics:
+
+* numpy reference (clear, test oracle)   — :func:`hourly_cost_series`
+* jax.numpy / jit-able                   — :func:`hourly_cost_series_jnp`
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .pricing import CostParams, TieredRate
+
+# ---------------------------------------------------------------------------
+# numpy reference
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HourlyCosts:
+    """Per-hour aggregate (summed over pairs) costs of each mode.
+
+    ``vpn[t]``  — cost of serving hour ``t`` entirely over VPN
+    ``cci[t]``  — cost of serving hour ``t`` entirely over CCI
+    Components are split so benchmarks can reproduce the paper's
+    leasing/transfer breakdowns (Figs. 7, 10b).
+    """
+
+    vpn_lease: np.ndarray
+    vpn_transfer: np.ndarray
+    cci_lease: np.ndarray
+    cci_transfer: np.ndarray
+
+    @property
+    def vpn(self) -> np.ndarray:
+        return self.vpn_lease + self.vpn_transfer
+
+    @property
+    def cci(self) -> np.ndarray:
+        return self.cci_lease + self.cci_transfer
+
+
+def tiered_marginal_cost_np(
+    tier: TieredRate, start_gb: np.ndarray, added_gb: np.ndarray
+) -> np.ndarray:
+    """Vectorized piecewise-linear marginal cost (numpy; broadcasts)."""
+    bounds = np.array(
+        [b if b != np.inf else 1e300 for b in tier.bounds_gb], dtype=np.float64
+    )
+    rates = np.array(tier.rates, dtype=np.float64)
+    prev = np.concatenate([[0.0], bounds[:-1]])
+    lo = np.asarray(start_gb, dtype=np.float64)[..., None]
+    hi = lo + np.asarray(added_gb, dtype=np.float64)[..., None]
+    seg = np.clip(np.minimum(hi, bounds) - np.maximum(lo, prev), 0.0, None)
+    return np.sum(seg * rates, axis=-1)
+
+
+def _as_2d(demand: np.ndarray) -> np.ndarray:
+    demand = np.asarray(demand, dtype=np.float64)
+    if demand.ndim == 1:
+        demand = demand[:, None]
+    assert demand.ndim == 2, "demand must be (T,) or (T, P)"
+    assert (demand >= 0).all(), "negative demand"
+    return demand
+
+
+def hourly_cost_series(params: CostParams, demand: np.ndarray) -> HourlyCosts:
+    """Compute the per-hour VPN and CCI cost series (numpy reference)."""
+    d = _as_2d(demand)
+    T, P = d.shape
+
+    # Cumulative monthly volume per pair (all-VPN counterfactual), exclusive
+    # of the current hour: tier position at the *start* of hour t.
+    t_idx = np.arange(T)
+    month_start = (t_idx // params.hours_per_month) * params.hours_per_month
+    cum = np.cumsum(d, axis=0) - d  # exclusive prefix sum
+    # Subtract volume accumulated before this month.
+    cum_at_month_start = np.zeros_like(d)
+    for p in range(P):
+        full = np.concatenate([[0.0], np.cumsum(d[:, p])])
+        cum_at_month_start[:, p] = full[month_start]
+    month_cum = cum - cum_at_month_start
+
+    vpn_transfer = tiered_marginal_cost_np(params.vpn_tier, month_cum, d).sum(axis=1)
+    vpn_lease = np.full(T, P * params.L_vpn)
+    cci_lease = np.full(T, params.L_cci + P * params.V_cci)
+    cci_transfer = params.c_cci * d.sum(axis=1)
+    return HourlyCosts(vpn_lease, vpn_transfer, cci_lease, cci_transfer)
+
+
+def evaluate_schedule(
+    params: CostParams,
+    demand: np.ndarray,
+    x: np.ndarray,
+    costs: Optional[HourlyCosts] = None,
+) -> float:
+    """Total cost of schedule ``x`` (Eq. 2). ``x[t]=1`` means CCI serves hour t."""
+    costs = costs if costs is not None else hourly_cost_series(params, demand)
+    x = np.asarray(x, dtype=np.float64)
+    assert x.shape == costs.vpn.shape
+    assert np.isin(x, (0.0, 1.0)).all()
+    return float(np.sum(x * costs.cci + (1.0 - x) * costs.vpn))
+
+
+def cost_breakdown(
+    params: CostParams, demand: np.ndarray, x: np.ndarray
+) -> dict:
+    """Leasing/transfer decomposition of a schedule's cost (paper Figs. 7, 10b)."""
+    c = hourly_cost_series(params, demand)
+    x = np.asarray(x, dtype=np.float64)
+    return {
+        "lease": float(np.sum(x * c.cci_lease + (1 - x) * c.vpn_lease)),
+        "transfer": float(np.sum(x * c.cci_transfer + (1 - x) * c.vpn_transfer)),
+        "total": float(np.sum(x * c.cci + (1 - x) * c.vpn)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# jax implementation (vectorized / vmap-able over scenario batches)
+# ---------------------------------------------------------------------------
+
+
+def tiered_marginal_cost_jnp(
+    tier: TieredRate, start_gb: jax.Array, added_gb: jax.Array
+) -> jax.Array:
+    """Vectorized piecewise-linear marginal cost. Broadcasts over inputs."""
+    bounds = jnp.asarray(
+        [b if b != np.inf else 1e30 for b in tier.bounds_gb], dtype=jnp.float32
+    )
+    rates = jnp.asarray(tier.rates, dtype=jnp.float32)
+    prev = jnp.concatenate([jnp.zeros(1, dtype=bounds.dtype), bounds[:-1]])
+    lo = start_gb[..., None]
+    hi = (start_gb + added_gb)[..., None]
+    seg = jnp.clip(jnp.minimum(hi, bounds) - jnp.maximum(lo, prev), 0.0)
+    return jnp.sum(seg * rates, axis=-1)
+
+
+def hourly_cost_series_jnp(params: CostParams, demand: jax.Array):
+    """jnp version of :func:`hourly_cost_series`. demand: (T, P) -> dict of (T,)."""
+    d = demand.astype(jnp.float32)
+    if d.ndim == 1:
+        d = d[:, None]
+    T, P = d.shape
+    t_idx = jnp.arange(T)
+    month_start = (t_idx // params.hours_per_month) * params.hours_per_month
+    full = jnp.concatenate([jnp.zeros((1, P), d.dtype), jnp.cumsum(d, axis=0)])
+    cum_excl = full[:-1]
+    month_cum = cum_excl - full[month_start]
+    vpn_transfer = jnp.sum(
+        tiered_marginal_cost_jnp(params.vpn_tier, month_cum, d), axis=1
+    )
+    vpn_lease = jnp.full((T,), P * params.L_vpn, dtype=d.dtype)
+    cci_lease = jnp.full((T,), params.L_cci + P * params.V_cci, dtype=d.dtype)
+    cci_transfer = params.c_cci * jnp.sum(d, axis=1)
+    return {
+        "vpn_lease": vpn_lease,
+        "vpn_transfer": vpn_transfer,
+        "cci_lease": cci_lease,
+        "cci_transfer": cci_transfer,
+        "vpn": vpn_lease + vpn_transfer,
+        "cci": cci_lease + cci_transfer,
+    }

@@ -1,0 +1,181 @@
+"""ToggleCCI — the paper's online algorithm (§VI, Fig. 5).
+
+A three-state controller (OFF → WAITING → ON) driven by sliding-window
+counterfactual costs:
+
+* ``R_VPN`` — what the last ``h`` hours *would have cost* entirely over VPN;
+* ``R_CCI`` — ditto entirely over CCI.
+
+Transitions (hysteresis thresholds θ₁ < θ₂, paper defaults 0.9 / 1.1):
+
+* OFF:      route VPN;  if ``R_CCI < θ₁·R_VPN``  → request CCI, enter WAITING.
+* WAITING:  route VPN for the provisioning delay ``D`` hours, then → ON.
+* ON:       route CCI;  committed for at least ``T_CCI`` hours; afterwards,
+            if ``R_CCI > θ₂·R_VPN`` → release CCI, return to OFF.
+
+During the warm-up ``t < h`` the window is the partial prefix (paper: "uses
+the cumulative cost from the past t steps only").
+
+Renewal semantics: the paper's §VI text implies a *continuous* stay-condition
+check after the first commitment, while Fig. 12(c) narrates renewal in
+``T_CCI``-sized chunks. Both are implemented; ``renew_in_chunks=False``
+(continuous) is the default. Tests cover both.
+
+Two equivalent implementations:
+* :func:`run_togglecci`      — pure-Python reference, returns rich diagnostics.
+* :func:`run_togglecci_scan` — ``jax.lax.scan`` version (jit/vmap-able across
+  scenario batches; used by the sensitivity benchmarks and the planner).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .costmodel import HourlyCosts, hourly_cost_series
+from .pricing import CostParams
+
+OFF, WAITING, ON = 0, 1, 2
+STATE_NAMES = {OFF: "OFF", WAITING: "WAITING", ON: "ON"}
+
+
+@dataclasses.dataclass
+class ToggleResult:
+    x: np.ndarray            # (T,) 0/1 — CCI actually serving traffic at hour t
+    state: np.ndarray        # (T,) FSM state during hour t
+    r_vpn: np.ndarray        # (T,) sliding-window VPN counterfactual cost
+    r_cci: np.ndarray        # (T,) sliding-window CCI counterfactual cost
+    requests: list           # hours at which CCI provisioning was requested
+    releases: list           # hours at which CCI was released
+    total_cost: float
+    costs: HourlyCosts
+
+
+def run_togglecci(
+    params: CostParams,
+    demand: np.ndarray,
+    *,
+    costs: Optional[HourlyCosts] = None,
+    renew_in_chunks: bool = False,
+) -> ToggleResult:
+    """Pure-Python reference implementation of ToggleCCI."""
+    costs = costs if costs is not None else hourly_cost_series(params, demand)
+    T = costs.vpn.shape[0]
+    h, D, T_cci = params.h, params.D, params.T_cci
+
+    vpn_pref = np.concatenate([[0.0], np.cumsum(costs.vpn)])
+    cci_pref = np.concatenate([[0.0], np.cumsum(costs.cci)])
+
+    x = np.zeros(T, dtype=np.int64)
+    state_trace = np.zeros(T, dtype=np.int64)
+    r_vpn_tr = np.zeros(T)
+    r_cci_tr = np.zeros(T)
+    requests, releases = [], []
+
+    # Transition spec (shared exactly with the scan version): at the START of
+    # hour t, observe the window [max(0, t-h), t), apply at most the cascade
+    # OFF->WAITING, WAITING->ON (covers D=0), ON->OFF; then serve hour t in the
+    # resulting state. ``t_state`` counts hours already served in the state, so
+    # WAITING serves exactly D VPN hours and ON serves >= T_cci CCI hours.
+    state, t_state = OFF, 0
+    for t in range(T):
+        lo = max(0, t - h)
+        r_vpn = vpn_pref[t] - vpn_pref[lo]
+        r_cci = cci_pref[t] - cci_pref[lo]
+        r_vpn_tr[t], r_cci_tr[t] = r_vpn, r_cci
+
+        if state == OFF and r_cci < params.theta1 * r_vpn:
+            state, t_state = WAITING, 0
+            requests.append(t)
+        if state == WAITING and t_state >= D:
+            state, t_state = ON, 0
+        if state == ON and t_state >= T_cci:
+            at_renewal = (t_state % params.T_cci) == 0
+            if (at_renewal if renew_in_chunks else True) and (
+                r_cci > params.theta2 * r_vpn
+            ):
+                state, t_state = OFF, 0
+                releases.append(t)
+
+        state_trace[t] = state
+        x[t] = 1 if state == ON else 0
+        t_state += 1
+
+    total = float(np.sum(np.where(x == 1, costs.cci, costs.vpn)))
+    return ToggleResult(
+        x=x, state=state_trace, r_vpn=r_vpn_tr, r_cci=r_cci_tr,
+        requests=requests, releases=releases, total_cost=total, costs=costs,
+    )
+
+
+# ---------------------------------------------------------------------------
+# lax.scan implementation
+# ---------------------------------------------------------------------------
+
+
+def run_togglecci_scan(
+    params: CostParams,
+    vpn_hourly: jax.Array,
+    cci_hourly: jax.Array,
+    *,
+    renew_in_chunks: bool = False,
+):
+    """``lax.scan`` ToggleCCI over precomputed per-hour mode costs.
+
+    Args:
+      vpn_hourly, cci_hourly: (T,) per-hour counterfactual costs.
+    Returns:
+      dict with ``x`` (T,), ``state`` (T,), ``total_cost`` scalar.
+
+    The sliding window is maintained as running sums plus the raw cost series
+    (indexed with ``lax.dynamic_slice``-free arithmetic: we carry prefix sums).
+    vmap over leading scenario axes by vmapping this function.
+    """
+    h, D, T_cci = params.h, params.D, params.T_cci
+    th1, th2 = params.theta1, params.theta2
+    vpn = vpn_hourly.astype(jnp.float32)
+    cci = cci_hourly.astype(jnp.float32)
+    T = vpn.shape[0]
+    vpn_pref = jnp.concatenate([jnp.zeros(1, jnp.float32), jnp.cumsum(vpn)])
+    cci_pref = jnp.concatenate([jnp.zeros(1, jnp.float32), jnp.cumsum(cci)])
+
+    def step(carry, t):
+        state, t_state = carry
+        lo = jnp.maximum(0, t - h)
+        r_vpn = vpn_pref[t] - vpn_pref[lo]
+        r_cci = cci_pref[t] - cci_pref[lo]
+
+        # Cascade identical to the python reference (start-of-hour transitions).
+        go_wait = (state == OFF) & (r_cci < th1 * r_vpn)
+        s1 = jnp.where(go_wait, WAITING, state)
+        ts1 = jnp.where(go_wait, 0, t_state)
+
+        wait_done = (s1 == WAITING) & (ts1 >= D)
+        s2 = jnp.where(wait_done, ON, s1)
+        ts2 = jnp.where(wait_done, 0, ts1)
+
+        past_commit = ts2 >= T_cci
+        at_renewal = (ts2 % T_cci) == 0
+        check = past_commit & at_renewal if renew_in_chunks else past_commit
+        go_off = (s2 == ON) & check & (r_cci > th2 * r_vpn)
+        s3 = jnp.where(go_off, OFF, s2)
+        ts3 = jnp.where(go_off, 0, ts2)
+
+        x_t = jnp.where(s3 == ON, 1, 0)
+        return (s3, ts3 + 1), (x_t, s3, r_vpn, r_cci)
+
+    (_, _), (x, state_tr, r_vpn_tr, r_cci_tr) = jax.lax.scan(
+        step, (jnp.int32(OFF), jnp.int32(0)), jnp.arange(T)
+    )
+    total = jnp.sum(jnp.where(x == 1, cci, vpn))
+    return {
+        "x": x,
+        "state": state_tr,
+        "r_vpn": r_vpn_tr,
+        "r_cci": r_cci_tr,
+        "total_cost": total,
+    }

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Per-kernel contract (see DESIGN.md §3):
+  <name>.py  pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py     jit'd wrappers dispatching kernel <-> ref by backend
+  ref.py     pure-jnp oracles (allclose-swept in tests/test_kernels.py)
+
+Kernels: flash_attention (causal/SWA/GQA/MLA-Dv), rmsnorm, int8_quant
+(gradient compression for the planner's VPN-mode path), tiered_cost (the
+paper's Eq. 2 hot loop).
+"""
+from . import ops, ref  # noqa: F401

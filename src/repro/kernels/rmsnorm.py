@@ -1,0 +1,54 @@
+"""Fused RMSNorm Pallas TPU kernel.
+
+One pass over each row block: mean-of-squares reduction + rsqrt + scale, all
+in VMEM — avoids the separate variance/normalize/scale HLO ops (3 HBM reads)
+the unfused lowering produces. Grid over row blocks; feature dim stays whole
+(d_model ≤ 8192 rows fit VMEM comfortably: 128 x 8192 x 4 B = 4 MiB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 128
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps) * w_ref[...].astype(jnp.float32)).astype(
+        o_ref.dtype
+    )
+
+
+def rmsnorm(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    eps: float = 1e-6,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = False,
+) -> jax.Array:
+    """x: (..., d); w: (d,). Leading dims are flattened into row blocks."""
+    orig_shape = x.shape
+    d = x.shape[-1]
+    n = 1
+    for s in x.shape[:-1]:
+        n *= s
+    x2 = x.reshape(n, d)
+    assert n % block_rows == 0, (n, block_rows)
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(n // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=interpret,
+    )(x2, w)
+    return out.reshape(orig_shape)

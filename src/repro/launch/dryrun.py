@@ -1,0 +1,345 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init). Everything below is ordinary.
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.dist.act_shard import activation_sharding
+from repro.dist.sharding import (
+    MeshRules,
+    batch_specs,
+    cache_shardings,
+    logits_sharding,
+    param_shardings,
+)
+from repro.dist.hlo_analysis import analyze as hlo_analyze
+from repro.dist.telemetry import collective_bytes
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.models.common import ModelConfig, count_params
+from repro.optim import AdamWConfig, adamw_init
+from repro.train.step import TrainConfig, make_train_step
+
+# ---------------------------------------------------------------------------
+# Shape cells (assignment table): train lowers train_step, decode_*/long_*
+# lower serve_step (one token against a seq_len cache), prefill lowers the
+# full-sequence prefill.
+# ---------------------------------------------------------------------------
+
+SHAPES = {
+    "train_4k": {"kind": "train", "seq": 4096, "batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq": 32768, "batch": 32},
+    "decode_32k": {"kind": "decode", "seq": 32768, "batch": 128},
+    "long_500k": {"kind": "decode", "seq": 524288, "batch": 1},
+}
+
+# long_500k needs sub-quadratic attention state: run for SSM/hybrid/SWA archs,
+# skip pure full-attention archs (DESIGN.md §4 records the rule).
+LONG_OK = {"xlstm-1.3b", "jamba-v0.1-52b", "mixtral-8x7b", "h2o-danube-3-4b"}
+
+# 671B needs bf16 optimizer moments to fit v5e HBM (DESIGN.md §3).
+BF16_MOMENTS = {"deepseek-v3-671b"}
+
+# Gradient-accumulation microbatches per arch for train_4k: chosen so the
+# per-device activation stack (remat'd layer inputs, ~ L x B_dev/M x S x d x 2B)
+# plus transients fits 16 GiB v5e HBM. Recorded per cell in §Dry-run.
+MICROBATCHES = {
+    "tinyllama-1.1b": 2,
+    "deepseek-7b": 4,
+    "yi-6b": 4,
+    "h2o-danube-3-4b": 4,
+    "mixtral-8x7b": 4,
+    "deepseek-v3-671b": 16,
+    "jamba-v0.1-52b": 4,
+    "xlstm-1.3b": 4,
+    "internvl2-2b": 2,
+    "whisper-tiny": 4,
+}
+
+
+def cell_supported(arch: str, shape: str) -> tuple:
+    if shape == "long_500k" and arch not in LONG_OK:
+        return False, "skip-by-rule: pure full-attention arch at 500k decode"
+    return True, ""
+
+
+def _sds(shape, dtype, sharding):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _with_shardings(abstract, shardings):
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        abstract,
+        shardings,
+    )
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, mesh, rules=MeshRules()):
+    """ShapeDtypeStruct stand-ins (weak-type-correct, shardable, zero
+    allocation) for every input of the lowered step."""
+    spec = SHAPES[shape_name]
+    B, S = spec["batch"], spec["seq"]
+    tok_sh = batch_specs(mesh, B, rules)
+    extras = {}
+    if cfg.n_patches:
+        pe_sh = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(tok_sh.spec[0], None, None)
+        )
+        extras["patch_embeds"] = _sds((B, cfg.n_patches, cfg.d_model), cfg.param_dtype, pe_sh)
+    if cfg.encoder_layers:
+        fr_sh = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(tok_sh.spec[0], None, None)
+        )
+        extras["frames"] = _sds((B, cfg.encoder_frames, cfg.d_model), cfg.param_dtype, fr_sh)
+
+    if spec["kind"] == "train":
+        return {
+            "tokens": _sds((B, S), jnp.int32, tok_sh),
+            "labels": _sds((B, S), jnp.int32, tok_sh),
+            **extras,
+        }
+    if spec["kind"] == "prefill":
+        cache_abs = jax.eval_shape(lambda: lm.init_cache(cfg, B, S))
+        seq_axes = ("data",) if B == 1 else ()
+        cache_sh = cache_shardings(mesh, cache_abs, rules, seq_axes=seq_axes)
+        return {
+            "tokens": _sds((B, S), jnp.int32, tok_sh),
+            "cache": _with_shardings(cache_abs, cache_sh),
+            **extras,
+        }
+    # decode: one new token against a seq_len cache.
+    cache_abs = jax.eval_shape(lambda: lm.init_cache(cfg, B, S))
+    seq_axes = ("data",) if B == 1 else ()
+    cache_sh = cache_shardings(mesh, cache_abs, rules, seq_axes=seq_axes)
+    return {
+        "token": _sds((B, 1), jnp.int32, tok_sh),
+        "cache": _with_shardings(cache_abs, cache_sh),
+    }
+
+
+def build_lowerable(cfg: ModelConfig, shape_name: str, mesh, rules=MeshRules()):
+    """Returns (fn, args, donate) ready for jax.jit(fn, donate_argnums=donate)."""
+    spec = SHAPES[shape_name]
+    B = spec["batch"]
+    params_abs = lm.abstract_params(cfg)
+    params_sh = param_shardings(mesh, params_abs, rules)
+    params_in = _with_shardings(params_abs, params_sh)
+    ins = input_specs(cfg, shape_name, mesh, rules)
+
+    if spec["kind"] == "train":
+        full_dp = set(rules.batch) >= {"data", "model"}
+        tcfg = TrainConfig(
+            optim=AdamWConfig(
+                moment_dtype="bfloat16" if cfg.name in BF16_MOMENTS else "float32"
+            ),
+            # Full-DP (zero3) shards the batch 256/512-way -> 1 row/device:
+            # no room (or need) for gradient accumulation.
+            microbatches=1 if full_dp else MICROBATCHES.get(cfg.name, 1),
+        )
+        opt_abs = jax.eval_shape(lambda: adamw_init(params_abs, tcfg.optim))
+        opt_sh = {
+            "m": params_sh,
+            "v": params_sh,
+            "step": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+        }
+        opt_in = _with_shardings(opt_abs, opt_sh)
+        base = make_train_step(cfg, tcfg)
+        has_pe, has_fr = "patch_embeds" in ins, "frames" in ins
+
+        if has_pe:
+            fn = lambda p, o, t, l, pe: base(p, o, t, l, patch_embeds=pe)
+            args = (params_in, opt_in, ins["tokens"], ins["labels"], ins["patch_embeds"])
+        elif has_fr:
+            fn = lambda p, o, t, l, fr: base(p, o, t, l, frames=fr)
+            args = (params_in, opt_in, ins["tokens"], ins["labels"], ins["frames"])
+        else:
+            fn = lambda p, o, t, l: base(p, o, t, l)
+            args = (params_in, opt_in, ins["tokens"], ins["labels"])
+        return fn, args, (0, 1), None
+
+    if spec["kind"] == "prefill":
+        has_pe, has_fr = "patch_embeds" in ins, "frames" in ins
+        if has_pe:
+            fn = lambda p, t, c, pe: lm.prefill(cfg, p, t, c, patch_embeds=pe)
+            args = (params_in, ins["tokens"], ins["cache"], ins["patch_embeds"])
+        elif has_fr:
+            fn = lambda p, t, c, fr: lm.prefill(cfg, p, t, c, frames=fr)
+            args = (params_in, ins["tokens"], ins["cache"], ins["frames"])
+        else:
+            fn = lambda p, t, c: lm.prefill(cfg, p, t, c)
+            args = (params_in, ins["tokens"], ins["cache"])
+        cache_sh = jax.tree.map(lambda l: l.sharding, ins["cache"])
+        outs = (logits_sharding(mesh, B, cfg.vocab, rules), cache_sh)
+        return fn, args, (2,), outs
+
+    fn = lambda p, t, c: lm.decode_step(cfg, p, t, c)
+    cache_sh = jax.tree.map(lambda l: l.sharding, ins["cache"])
+    outs = (logits_sharding(mesh, B, cfg.vocab, rules), cache_sh)
+    return fn, (params_in, ins["token"], ins["cache"]), (2,), outs
+
+
+SERVE_REPLICATE_LIMIT = 4e9  # bytes of TP-sharded params a chip will host
+
+
+def serving_rules(cfg: ModelConfig, mesh) -> MeshRules:
+    """Serving has no optimizer state, so FSDP's per-layer weight gathers
+    are pure overhead: replicate weights over the dp axes whenever the
+    TP-sharded copy fits comfortably (kills ~1.3 GiB of f32 weight gathers
+    per decoded token on the 7B-class cells; big-MoE configs keep FSDP)."""
+    tp = mesh.shape.get("model", 1)
+    approx_bytes = count_params(lm.abstract_params(cfg)) * 2 / tp
+    if approx_bytes <= SERVE_REPLICATE_LIMIT:
+        return MeshRules(embed=(), expert=())
+    return MeshRules()
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, rules=MeshRules(), tag=None):
+    """Lower + compile one (arch x shape x mesh) cell; returns the record."""
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if SHAPES[shape_name]["kind"] in ("decode", "prefill"):
+        rules = serving_rules(cfg, mesh)
+    n_chips = mesh.size
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": n_chips,
+        "kind": SHAPES[shape_name]["kind"],
+    }
+    ok, why = cell_supported(arch, shape_name)
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        return rec
+
+    t0 = time.time()
+    fn, args, donate, outs = build_lowerable(cfg, shape_name, mesh, rules)
+    with mesh, activation_sharding(mesh, rules):
+        jit_kw = {"donate_argnums": donate}
+        if outs is not None:
+            jit_kw["out_shardings"] = outs
+        lowered = jax.jit(fn, **jit_kw).lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    rec["flops_per_device"] = float(ca.get("flops", 0.0))
+    rec["bytes_accessed_per_device"] = float(ca.get("bytes accessed", 0.0))
+
+    ma = compiled.memory_analysis()
+    if ma is not None:
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "code_bytes": int(ma.generated_code_size_in_bytes),
+        }
+        live = (
+            ma.argument_size_in_bytes
+            + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes
+            - ma.alias_size_in_bytes
+        )
+        rec["memory"]["peak_estimate_bytes"] = int(live)
+
+    txt = compiled.as_text()
+    # Archive the per-device SPMD HLO (zstd) so analyzer improvements can
+    # re-score cells without recompiling.
+    hlo_dir = os.environ.get("REPRO_HLO_DIR", "results/hlo")
+    os.makedirs(hlo_dir, exist_ok=True)
+    import zstandard
+
+    if tag is None:
+        tag = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}"
+    with open(os.path.join(hlo_dir, tag + ".hlo.zst"), "wb") as f:
+        f.write(zstandard.ZstdCompressor(level=6).compress(txt.encode()))
+    # Trip-count-aware per-device analysis (xla cost_analysis counts while
+    # bodies once — see repro.dist.hlo_analysis): the roofline source.
+    walked = hlo_analyze(txt)
+    rec["hlo_flops_per_device"] = walked["flops"]
+    rec["hlo_bytes_per_device"] = walked["bytes"]
+    rec["hlo_bytes_upper_per_device"] = walked["bytes_upper"]
+    rec["collectives"] = walked["collectives"]
+    rec["collectives_flat"] = collective_bytes(txt)  # loop bodies counted once
+    rec["params_total"] = count_params(lm.abstract_params(cfg))
+    rec["status"] = "ok"
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="Multi-pod dry-run (lower+compile)")
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape id or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--rules", default="default", choices=["default", "zero3"],
+                    help="sharding-rule variant (zero3: pure-DP dense trains)")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    rules = MeshRules()
+    if args.rules == "zero3":
+        from repro.dist.sharding import ZERO3_RULES
+
+        rules = ZERO3_RULES
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi_pod in meshes:
+                tag = f"{arch}__{shape}__{'multi' if multi_pod else 'single'}"
+                if args.rules != "default":
+                    tag += "__" + args.rules
+                path = os.path.join(args.out, tag + ".json")
+                try:
+                    rec = run_cell(arch, shape, multi_pod=multi_pod, rules=rules, tag=tag)
+                except Exception as e:  # a failure here is a bug in the system
+                    rec = {
+                        "arch": arch,
+                        "shape": shape,
+                        "mesh": "2x16x16" if multi_pod else "16x16",
+                        "status": "FAILED",
+                        "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-4000:],
+                    }
+                    failures += 1
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    mem = rec.get("memory", {}).get("peak_estimate_bytes", 0)
+                    extra = (
+                        f" flops/dev={rec['hlo_flops_per_device']:.3e}"
+                        f" peak/dev={mem/2**30:.2f}GiB"
+                        f" coll={rec['collectives']['total_operand_bytes']/2**20:.1f}MiB"
+                        f" lower={rec.get('lower_s')}s compile={rec.get('compile_s')}s"
+                    )
+                elif status == "FAILED":
+                    extra = " " + rec["error"][:160]
+                print(f"[{status:7s}] {tag}{extra}", flush=True)
+    print(f"done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so that
+importing this module never touches jax device state — the dry-run sets
+``XLA_FLAGS`` before first jax init, and smoke tests must keep seeing the
+single real CPU device.
+
+Single pod: (16, 16) = 256 chips -> ("data", "model").
+Multi-pod:  (2, 16, 16) = 512 chips -> ("pod", "data", "model"); the "pod"
+axis is the cross-DCI dimension the interconnect planner prices.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(*, data: int = 2, model: int = 2, pod: int = 1):
+    """Small mesh over forced host devices (tests / planner demos)."""
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)

@@ -1,0 +1,47 @@
+"""Re-score dry-run cells from archived HLO (results/hlo/*.hlo.zst) after
+analyzer changes — no recompilation. Updates the dryrun JSON records in place.
+
+Usage: PYTHONPATH=src python -m repro.launch.rescore [--hlo results/hlo] [--out results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+import zstandard
+
+from repro.dist.hlo_analysis import analyze
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--hlo", default="results/hlo")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    n = 0
+    for path in sorted(glob.glob(os.path.join(args.hlo, "*.hlo.zst"))):
+        tag = os.path.basename(path)[: -len(".hlo.zst")]
+        rec_path = os.path.join(args.out, tag + ".json")
+        if not os.path.exists(rec_path):
+            continue
+        with open(path, "rb") as f:
+            txt = zstandard.ZstdDecompressor().decompress(f.read()).decode()
+        walked = analyze(txt)
+        with open(rec_path) as f:
+            rec = json.load(f)
+        rec["hlo_flops_per_device"] = walked["flops"]
+        rec["hlo_bytes_per_device"] = walked["bytes"]
+        rec["hlo_bytes_upper_per_device"] = walked["bytes_upper"]
+        rec["collectives"] = walked["collectives"]
+        with open(rec_path, "w") as f:
+            json.dump(rec, f, indent=1)
+        n += 1
+        print(f"rescored {tag}", flush=True)
+    print(f"done: {n} cells")
+
+
+if __name__ == "__main__":
+    main()

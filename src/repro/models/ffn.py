@@ -1,0 +1,146 @@
+"""FFN layers: gated SwiGLU/GELU MLPs and capacity-based MoE.
+
+MoE dispatch (DESIGN.md §3): scatter/gather with per-group capacity rather
+than the one-hot (tokens x experts x capacity) einsum — the dispatch buffer is
+(E, C, d) per token group, which stays small even at DeepSeek-V3 scale
+(256 experts), while expert matmuls shard their hidden dim over the 'model'
+mesh axis (tensor parallelism inside experts; experts themselves replicated —
+the EP variant is a perf-iteration knob, see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.act_shard import constrain, constrain_vjp
+
+from .common import ModelConfig, dense_init, split_tree
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP
+# ---------------------------------------------------------------------------
+
+
+def dense_ffn_init(key, cfg: ModelConfig, *, d_ff: int = 0, gated: bool = True):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = cfg.param_dtype
+    if gated:
+        kg, ki, ko = split_tree(key, 3)
+        return {
+            "wg": dense_init(kg, (d, f), dt),
+            "wi": dense_init(ki, (d, f), dt),
+            "wo": dense_init(ko, (f, d), dt, fan_in=f),
+        }
+    ki, ko = split_tree(key, 2)
+    return {
+        "wi": dense_init(ki, (d, f), dt),
+        "wo": dense_init(ko, (f, d), dt, fan_in=f),
+    }
+
+
+def dense_ffn_apply(p, x):
+    if "wg" in p:
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    else:
+        h = jax.nn.gelu(x @ p["wi"], approximate=True)
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+
+def moe_init(key, cfg: ModelConfig):
+    m = cfg.moe
+    d, E, f = cfg.d_model, m.n_experts, m.d_ff_expert
+    dt = cfg.param_dtype
+    kr, kg, ki, ko, ks = split_tree(key, 5)
+    p = {
+        "router": dense_init(kr, (d, E), jnp.float32),  # router in f32 (std practice)
+        "wg": dense_init(kg, (E, d, f), dt, fan_in=d),
+        "wi": dense_init(ki, (E, d, f), dt, fan_in=d),
+        "wo": dense_init(ko, (E, f, d), dt, fan_in=f),
+    }
+    if m.n_shared:
+        p["shared"] = dense_ffn_init(ks, cfg, d_ff=m.d_ff_expert * m.n_shared)
+    return p
+
+
+def _dispatch_group(m, p, xg):
+    """One token group through the experts. xg: (N, d) -> (y (N, d), aux)."""
+    N, d = xg.shape
+    E, k = m.n_experts, m.top_k
+    C = max(8, int(N * k / E * m.capacity_factor))
+
+    logits = xg.astype(jnp.float32) @ p["router"]            # (N, E)
+    if m.router == "sigmoid":                                 # DeepSeek-V3 style
+        scores = jax.nn.sigmoid(logits)
+        gate_w, gate_idx = jax.lax.top_k(scores, k)
+        gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+        aux = jnp.float32(0.0)                                # aux-loss-free
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate_w, gate_idx = jax.lax.top_k(probs, k)
+        gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+        # Switch-style load-balance aux loss.
+        density = jnp.mean(
+            jax.nn.one_hot(gate_idx[:, 0], E, dtype=jnp.float32), axis=0
+        )
+        mean_probs = probs.mean(axis=0)
+        aux = m.aux_coef * E * jnp.sum(density * mean_probs)
+
+    # Slot bookkeeping: position of each (token, k) slot inside its expert.
+    slot_e = gate_idx.reshape(-1)                             # (N*k,)
+    onehot = jax.nn.one_hot(slot_e, E, dtype=jnp.int32)       # (N*k, E)
+    pos_all = jnp.cumsum(onehot, axis=0) - onehot
+    pos = jnp.take_along_axis(pos_all, slot_e[:, None], axis=1)[:, 0]
+    keep = pos < C
+    pos_c = jnp.minimum(pos, C - 1)
+
+    # Scatter tokens into (E, C, d) — with d sharded over the TP axis from
+    # the start (TRAIN/PREFILL groups only: the resharding pays off when the
+    # buffer dwarfs the token rows; decode dispatches one-token groups where
+    # the extra all-to-alls REGRESSED the deepseek-v3 decode cell ~2x).
+    # The dispatch/expert chain then never materializes a full (E, C, d)
+    # buffer on one device: the expert matmuls' partial-sum psums shrink from
+    # (E,C,d)-sized (~300 MB f32 at DeepSeek-V3 scale, the dominant
+    # collective of the whole model) to (E,C,f/16)-sized (~5 MB).
+    shard_d = N * k >= E
+    pin = (lambda t: constrain_vjp(t, "feat_tp")) if shard_d else (lambda t: t)
+    x_rep = jnp.repeat(pin(xg), k, axis=0)                    # (N*k, d)
+    x_rep = jnp.where(keep[:, None], x_rep, 0)
+    buf = pin(jnp.zeros((E, C, d), xg.dtype).at[slot_e, pos_c].add(x_rep))
+
+    # Expert compute (TP over the f dim via sharding rules).
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["wg"])) * jnp.einsum(
+        "ecd,edf->ecf", buf, p["wi"]
+    )
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["wo"])
+    # Keep the capacity buffer's partial sums sharded on d (reduce-scatter
+    # instead of a full (E,C,d) all-reduce); only the gathered token rows are
+    # re-replicated below — E*C/N x fewer reduced bytes.
+    out_buf = pin(out_buf)
+
+    # Gather back and combine with gate weights.
+    y_slots = pin(out_buf[slot_e, pos_c])                     # (N*k, d)
+    w = (gate_w.reshape(-1) * keep).astype(y_slots.dtype)
+    y = (y_slots * w[:, None]).reshape(N, k, d).sum(axis=1)
+    return y, aux
+
+
+def moe_apply(cfg: ModelConfig, p, x):
+    """x: (B, S, d) -> (y, aux_loss). Tokens are grouped per batch row (or
+    splits of it) so the dispatch buffer stays VMEM-friendly."""
+    m = cfg.moe
+    B, S, d = x.shape
+    g = min(m.group_size, S)
+    assert S % g == 0, (S, g)
+    xg = x.reshape(B * (S // g), g, d)
+    y, aux = jax.vmap(lambda t: _dispatch_group(m, p, t))(xg)
+    y = y.reshape(B, S, d)
+    if m.n_shared:
+        y = y + dense_ffn_apply(p["shared"], x)
+    return y, aux.mean()

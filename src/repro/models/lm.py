@@ -1,0 +1,426 @@
+"""Model assembly: init / forward (train) / prefill / decode for every family.
+
+Depth is organized as ``cfg.segments = ((pattern, repeats), ...)``; parameters
+are stacked per pattern position and the forward pass is a ``lax.scan`` over
+repeats (compile time flat in depth — DeepSeek-V3's 61 layers compile as 2
+scans). Heterogeneous interleaves (Jamba 1:7, xLSTM 7:1) become patterns.
+
+Entry points
+  init_params(cfg, key)                               -> params
+  forward(cfg, params, tokens, ...)                   -> (logits, extras)
+  init_cache(cfg, batch, max_len)                     -> cache
+  prefill(cfg, params, tokens, cache, ...)            -> (logits, cache)
+  decode_step(cfg, params, token, cache)              -> (logits, cache)
+
+``extras`` carries MoE aux losses and (DeepSeek-V3) MTP logits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.act_shard import constrain
+
+from . import attention as attn
+from . import ffn as ffn_mod
+from . import ssm
+from .common import (
+    LayerKind,
+    ModelConfig,
+    count_params,
+    dense_init,
+    embed_init,
+    ones_init,
+    sinusoidal_positions,
+    split_tree,
+)
+
+# ---------------------------------------------------------------------------
+# Layer init / apply dispatch
+# ---------------------------------------------------------------------------
+
+_MIXER_INIT = {
+    "gqa": attn.gqa_init,
+    "mla": attn.mla_init,
+    "mamba": ssm.mamba_init,
+    "mlstm": ssm.mlstm_init,
+    "slstm": ssm.slstm_init,
+}
+
+
+def _rmsnorm(x, w, eps):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def _grad_barrier(x):
+    """Identity whose COTANGENT is cast to x's dtype. The f32 loss spine
+    (CE/z-loss) otherwise propagates f32 cotangents through every residual:
+    the backward dx dots then pull f32 copies of the weights through the
+    ZeRO-3 all-gathers and push f32 weight-gradient reductions — 2x the wire
+    of the bf16 backward this barrier enforces at each layer boundary."""
+    dtype = x.dtype
+
+    @jax.custom_vjp
+    def inner(v):
+        return v
+
+    def fwd(v):
+        return v, None
+
+    def bwd(_, g):
+        return (g.astype(dtype),)
+
+    inner.defvjp(fwd, bwd)
+    return inner(x)
+
+
+def init_layer(key, cfg: ModelConfig, kind: LayerKind, *, gated: bool = True):
+    d, dt = cfg.d_model, cfg.param_dtype
+    ks = split_tree(key, 4)
+    p = {"norm1": ones_init(None, (d,), dt), "mixer": _MIXER_INIT[kind.mixer](ks[0], cfg)}
+    if kind.cross:
+        p["norm_x"] = ones_init(None, (d,), dt)
+        p["xattn"] = attn.xattn_init(ks[1], cfg)
+    if kind.ffn == "dense":
+        p["norm2"] = ones_init(None, (d,), dt)
+        p["ffn"] = ffn_mod.dense_ffn_init(ks[2], cfg, gated=gated)
+    elif kind.ffn == "moe":
+        p["norm2"] = ones_init(None, (d,), dt)
+        p["ffn"] = ffn_mod.moe_init(ks[3], cfg)
+    return p
+
+
+def apply_layer(cfg: ModelConfig, kind: LayerKind, p, x, *, pos0=0, memory=None, causal=True):
+    """Full-sequence layer. Returns (x, cache_entry, aux)."""
+    h = _rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if kind.mixer == "gqa":
+        y, entry = attn.gqa_apply(cfg, p["mixer"], h, pos0=pos0, causal=causal)
+    elif kind.mixer == "mla":
+        y, entry = attn.mla_apply(cfg, p["mixer"], h, pos0=pos0, causal=causal)
+    elif kind.mixer == "mamba":
+        y, entry = ssm.mamba_apply(cfg, p["mixer"], h)
+    elif kind.mixer == "mlstm":
+        y, entry = ssm.mlstm_apply(cfg, p["mixer"], h)
+    else:  # slstm
+        y, entry = ssm.slstm_apply(cfg, p["mixer"], h)
+    x = x + y
+    if kind.cross:
+        hx = _rmsnorm(x, p["norm_x"], cfg.norm_eps)
+        x = x + attn.xattn_apply(cfg, p["xattn"], hx, memory)
+    aux = jnp.float32(0.0)
+    if kind.ffn != "none":
+        h2 = _rmsnorm(x, p["norm2"], cfg.norm_eps)
+        if kind.ffn == "dense":
+            x = x + ffn_mod.dense_ffn_apply(p["ffn"], h2)
+        else:
+            y2, aux = ffn_mod.moe_apply(cfg, p["ffn"], h2)
+            x = x + y2
+    return x, entry, aux
+
+
+def apply_layer_decode(cfg: ModelConfig, kind: LayerKind, p, x, cache, pos, *, memory=None):
+    """One-token layer step. Returns (x, new_cache_entry, aux)."""
+    h = _rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if kind.mixer == "gqa":
+        y, entry = attn.gqa_decode(cfg, p["mixer"], h, cache, pos)
+    elif kind.mixer == "mla":
+        y, entry = attn.mla_decode(cfg, p["mixer"], h, cache, pos)
+    elif kind.mixer == "mamba":
+        y, entry = ssm.mamba_decode(cfg, p["mixer"], h, cache)
+    elif kind.mixer == "mlstm":
+        y, entry = ssm.mlstm_decode(cfg, p["mixer"], h, cache)
+    else:
+        y, entry = ssm.slstm_decode(cfg, p["mixer"], h, cache)
+    x = x + y
+    if kind.cross:
+        hx = _rmsnorm(x, p["norm_x"], cfg.norm_eps)
+        x = x + attn.xattn_apply(cfg, p["xattn"], hx, memory)
+    aux = jnp.float32(0.0)
+    if kind.ffn != "none":
+        h2 = _rmsnorm(x, p["norm2"], cfg.norm_eps)
+        if kind.ffn == "dense":
+            x = x + ffn_mod.dense_ffn_apply(p["ffn"], h2)
+        else:
+            y2, aux = ffn_mod.moe_apply(cfg, p["ffn"], h2)
+            x = x + y2
+    return x, entry, aux
+
+
+def _cache_entry_init(cfg: ModelConfig, kind: LayerKind, batch: int, max_len: int, dtype):
+    if kind.mixer == "gqa":
+        return attn.gqa_cache_init(cfg, batch, max_len, dtype)
+    if kind.mixer == "mla":
+        return attn.mla_cache_init(cfg, batch, max_len, dtype)
+    if kind.mixer == "mamba":
+        return ssm.mamba_cache_init(cfg, batch, dtype)
+    if kind.mixer == "mlstm":
+        return ssm.mlstm_cache_init(cfg, batch, dtype)
+    return ssm.slstm_cache_init(cfg, batch, dtype)
+
+
+def _fill_entry(cfg: ModelConfig, kind: LayerKind, cache, entry, pos0: int):
+    if kind.mixer == "gqa":
+        return attn.gqa_fill_cache(cfg, cache, entry, pos0)
+    if kind.mixer == "mla":
+        return attn.mla_fill_cache(cfg, cache, entry, pos0)
+    return entry  # SSM kinds: the final state IS the cache
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key):
+    dt = cfg.param_dtype
+    d, V = cfg.d_model, cfg.vocab
+    keys = split_tree(key, 8)
+    params = {
+        "embed": embed_init(keys[0], (V, d), dt),
+        "final_norm": ones_init(None, (d,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(keys[1], (d, V), dt)
+
+    gated = cfg.family != "encdec"
+    segs = []
+    for si, (pattern, rep) in enumerate(cfg.segments):
+        seg = []
+        for pi, kind in enumerate(pattern):
+            kseed = jax.random.fold_in(keys[2], si * 97 + pi)
+            lkeys = jnp.stack(split_tree(kseed, rep))
+            stacked = jax.vmap(lambda k, kind=kind: init_layer(k, cfg, kind, gated=gated))(lkeys)
+            seg.append(stacked)
+        segs.append(seg)
+    params["segments"] = segs
+
+    if cfg.encoder_layers:
+        ekind = LayerKind("gqa", "dense")
+        ekeys = jnp.stack(split_tree(keys[3], cfg.encoder_layers))
+        params["encoder"] = {
+            "blocks": jax.vmap(lambda k: init_layer(k, cfg, ekind, gated=False))(ekeys),
+            "norm": ones_init(None, (d,), dt),
+        }
+    if cfg.mtp:
+        params["mtp"] = {
+            "proj": dense_init(keys[4], (2 * d, d), dt, fan_in=2 * d),
+            "norm_h": ones_init(None, (d,), dt),
+            "norm_e": ones_init(None, (d,), dt),
+            "block": init_layer(keys[5], cfg, LayerKind("mla", "dense")),
+        }
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    """Shape/dtype skeleton without allocation (dry-run path)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill share this)
+# ---------------------------------------------------------------------------
+
+
+def _embed(cfg, params, tokens, patch_embeds):
+    x = constrain(jnp.take(params["embed"], tokens, axis=0), "btd")
+    if cfg.n_patches and patch_embeds is not None:
+        # VLM: stub-ViT patch embeddings occupy the first n_patches positions.
+        n = cfg.n_patches
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x[:, n:]], axis=1)
+    if cfg.family == "encdec":
+        x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+    return x
+
+
+def _run_encoder(cfg, params, frames):
+    """Whisper encoder over stub conv-frontend frames (B, M, d)."""
+    x = frames.astype(cfg.param_dtype)
+    x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+    ekind = LayerKind("gqa", "dense")
+
+    def body(h, lp):
+        h, _, _ = apply_layer(cfg, ekind, lp, h, causal=False)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"]["blocks"])
+    return constrain(_rmsnorm(x, params["encoder"]["norm"], cfg.norm_eps), "bmd")
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+def _run_segments(cfg, params, x, *, pos0=0, memory=None, collect=False):
+    """Scan every segment. Returns (x, aux, entries) — entries is a list of
+    per-segment lists of stacked cache entries (or None if collect=False)."""
+    aux_total = jnp.float32(0.0)
+    all_entries = []
+    for (pattern, rep), seg_params in zip(cfg.segments, params["segments"]):
+        def body(carry, lp, pattern=pattern):
+            h, aux = carry
+            h = constrain(_grad_barrier(h), "btd")
+            entries = []
+            for pi, kind in enumerate(pattern):
+                h, entry, a = apply_layer(
+                    cfg, kind, lp[pi], h, pos0=pos0, memory=memory
+                )
+                entries.append(entry)
+                aux = aux + a
+            return (h, aux), entries if collect else None
+
+        (x, aux_total), entries = jax.lax.scan(
+            _remat(cfg, body), (x, aux_total), tuple(seg_params)
+        )
+        all_entries.append(entries)
+    return x, aux_total, all_entries
+
+
+def forward(
+    cfg: ModelConfig,
+    params,
+    tokens: jax.Array,                 # (B, S) int32
+    *,
+    patch_embeds: Optional[jax.Array] = None,   # (B, n_patches, d) VLM stub
+    frames: Optional[jax.Array] = None,         # (B, M, d) whisper stub
+    pos0: int = 0,
+    collect_cache: bool = False,
+    logits_mode: str = "all",
+):
+    """Returns (logits (B,S,V), extras {aux, mtp_logits?, entries?, memory?}).
+
+    ``logits_mode='last'`` projects only the final position — serving prefill
+    needs one next-token distribution, and for odd vocabs (internvl's 92553,
+    whisper's 51865) that cannot shard over 'model', the full (B, S, V) f32
+    logits were the single largest buffer of the prefill cells (22.6 GiB).
+    """
+    memory = _run_encoder(cfg, params, frames) if cfg.encoder_layers else None
+    x = _embed(cfg, params, tokens, patch_embeds)
+    x, aux, entries = _run_segments(
+        cfg, params, x, pos0=pos0, memory=memory, collect=collect_cache
+    )
+    x = _rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    if logits_mode == "last":
+        x = x[:, -1:]
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = constrain((x @ head).astype(jnp.float32), "btv")
+    extras = {"aux": aux}
+    if collect_cache:
+        extras["entries"] = entries
+        extras["memory"] = memory
+    if cfg.mtp and logits_mode == "all":
+        # DeepSeek-V3 multi-token prediction: one extra block predicts t+2
+        # from (h_t, embed(token_{t+1})); shares the output head. Training
+        # objective only — skipped on the serving (last-logits) path.
+        mp = params["mtp"]
+        h_trunc = _rmsnorm(x[:, :-1], mp["norm_h"], cfg.norm_eps)
+        e_next = constrain(
+            jnp.take(params["embed"], tokens[:, 1:], axis=0), "btd"
+        )
+        e_next = _rmsnorm(e_next, mp["norm_e"], cfg.norm_eps)
+        hm = constrain(
+            jnp.concatenate([h_trunc, e_next], axis=-1) @ mp["proj"], "btd"
+        )
+        hm, _, _ = apply_layer(cfg, LayerKind("mla", "dense"), mp["block"], hm, pos0=pos0)
+        extras["mtp_logits"] = (hm @ head).astype(jnp.float32)
+    return logits, extras
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.param_dtype
+    segs = []
+    for pattern, rep in cfg.segments:
+        seg = []
+        for kind in pattern:
+            entry = _cache_entry_init(cfg, kind, batch, max_len, dtype)
+            seg.append(jax.tree.map(lambda a: jnp.broadcast_to(a[None], (rep,) + a.shape).copy() if rep > 1 else a[None], entry))
+        segs.append(seg)
+    cache = {"segments": segs, "index": jnp.zeros((), jnp.int32)}
+    if cfg.encoder_layers:
+        cache["memory"] = jnp.zeros((batch, cfg.encoder_frames, cfg.d_model), dtype)
+    return cache
+
+
+def prefill(
+    cfg: ModelConfig,
+    params,
+    tokens: jax.Array,
+    cache,
+    *,
+    patch_embeds=None,
+    frames=None,
+):
+    """Run the full-sequence path and install entries into the cache.
+    Returns last-position logits (B, 1, V) — all a serving stack consumes."""
+    S = tokens.shape[1]
+    logits, extras = forward(
+        cfg, params, tokens, patch_embeds=patch_embeds, frames=frames,
+        pos0=0, collect_cache=True, logits_mode="last",
+    )
+    new_segs = []
+    for (pattern, rep), seg_cache, seg_entries in zip(
+        cfg.segments, cache["segments"], extras["entries"]
+    ):
+        seg_new = []
+        for pi, kind in enumerate(pattern):
+            filled = jax.vmap(
+                lambda c, e, kind=kind: _fill_entry(cfg, kind, c, e, 0)
+            )(seg_cache[pi], seg_entries[pi])
+            seg_new.append(filled)
+        new_segs.append(seg_new)
+    new_cache = {"segments": new_segs, "index": jnp.full((), S, jnp.int32)}
+    if cfg.encoder_layers:
+        new_cache["memory"] = extras["memory"]
+    return logits, new_cache
+
+
+def decode_step(cfg: ModelConfig, params, token: jax.Array, cache):
+    """token: (B, 1) int32. Returns (logits (B,1,V), new cache)."""
+    pos = cache["index"]
+    memory = cache.get("memory")
+    x = constrain(jnp.take(params["embed"], token, axis=0), "btd")
+    if cfg.family == "encdec":
+        pe = sinusoidal_positions(8192, cfg.d_model)
+        x = x + jax.lax.dynamic_slice_in_dim(pe, pos, 1, axis=0)[None].astype(x.dtype)
+
+    new_segs = []
+    for (pattern, rep), seg_params, seg_cache in zip(
+        cfg.segments, params["segments"], cache["segments"]
+    ):
+        def body(h, xs, pattern=pattern):
+            lp, lc = xs
+            new_entries = []
+            for pi, kind in enumerate(pattern):
+                h, entry, _ = apply_layer_decode(
+                    cfg, kind, lp[pi], h, lc[pi], pos, memory=memory
+                )
+                new_entries.append(entry)
+            return h, new_entries
+
+        x, entries = jax.lax.scan(body, x, (tuple(seg_params), tuple(seg_cache)))
+        new_segs.append(entries)
+
+    x = _rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = constrain((x @ head).astype(jnp.float32), "btv")
+    new_cache = {"segments": new_segs, "index": pos + 1}
+    if cfg.encoder_layers:
+        new_cache["memory"] = memory
+    return logits, new_cache
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return count_params(abstract_params(cfg))

@@ -1,0 +1,445 @@
+"""Recurrent mixers: Mamba (Jamba), mLSTM and sLSTM (xLSTM).
+
+Forms per mixer (parallel for train/prefill, O(1)-state recurrent for decode):
+
+* Mamba     — selective SSM. Training uses a *chunked* scan: ``lax.scan`` over
+  sequence chunks with a ``lax.associative_scan`` inside each chunk, so the
+  (B, L, d_inner, d_state) discretized tensors are materialized only
+  chunk-at-a-time (TPU-friendly; a fully sequential scan would serialize the
+  VPU, a full associative scan would blow HBM at 4k x 8192 x 16).
+* mLSTM     — matrix-memory LSTM. Training uses the stabilized parallel form
+  (log-gate cumulative sums, causal D matrix); decode carries (C, n, m).
+  Equivalence of the two forms is property-tested.
+* sLSTM     — scalar-memory LSTM with block-diagonal recurrence; inherently
+  sequential (hidden-to-gate feedback), implemented as ``lax.scan`` over time
+  with the input projections hoisted out of the scan.
+
+All gates are stabilized in log space (the xLSTM m-state trick), so long
+sequences (500k decode) cannot overflow.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init, ones_init, split_tree
+
+# ---------------------------------------------------------------------------
+# Mamba
+# ---------------------------------------------------------------------------
+
+MAMBA_CHUNK = 64
+
+
+def mamba_init(key, cfg: ModelConfig):
+    d, di, ds = cfg.d_model, cfg.d_inner, cfg.mamba_d_state
+    dtr, cw = cfg.dt_rank, cfg.mamba_conv
+    dt = cfg.param_dtype
+    ks = split_tree(key, 6)
+    # dt bias: softplus^-1 of dt in [1e-3, 1e-1] (mamba reference init).
+    u = jax.random.uniform(ks[4], (di,), jnp.float32)
+    dt_init = jnp.exp(u * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt_init + jnp.log1p(-jnp.exp(-dt_init))  # inverse softplus
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dt),
+        "conv_w": dense_init(ks[1], (cw, di), dt, fan_in=cw),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * ds), dt),
+        "dt_proj": dense_init(ks[3], (dtr, di), dt, fan_in=dtr),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], (di, d), dt, fan_in=di),
+    }
+
+
+def mamba_cache_init(cfg: ModelConfig, batch: int, dtype):
+    di, ds, cw = cfg.d_inner, cfg.mamba_d_state, cfg.mamba_conv
+    return {
+        "conv": jnp.zeros((batch, cw - 1, di), dtype),
+        "h": jnp.zeros((batch, di, ds), jnp.float32),
+    }
+
+
+def _causal_depthwise_conv(x, w, b):
+    """x: (B, S, di); w: (cw, di) depthwise kernel; left-padded (causal)."""
+    cw = w.shape[0]
+    di = x.shape[-1]
+    out = jax.lax.conv_general_dilated(
+        x, w[:, None, :],
+        window_strides=(1,), padding=[(cw - 1, 0)],
+        dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=di,
+    )
+    return out + b
+
+
+def _ssm_inputs(cfg, p, xc):
+    """Shared discretization: xc (B,S,di) -> (a, bx, C_) for the scan."""
+    ds, dtr = cfg.mamba_d_state, cfg.dt_rank
+    proj = xc @ p["x_proj"]
+    dt_r, B_, C_ = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(dt_r.astype(jnp.float32) @ p["dt_proj"].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                                  # (di, ds)
+    a = jnp.exp(dt[..., None] * A)                            # (B,S,di,ds)
+    bx = (dt * xc.astype(jnp.float32))[..., None] * B_.astype(jnp.float32)[..., None, :]
+    return a, bx, C_.astype(jnp.float32)
+
+
+def _selective_scan_chunked(a, bx, C_, h0, chunk=MAMBA_CHUNK):
+    """h_t = a_t * h_{t-1} + bx_t ; y_t = (h_t * C_t).sum(-1).
+
+    Scan over chunks; associative scan inside. Returns (y (B,S,di), h_final).
+    """
+    B, S, di, ds = a.shape
+    assert S % chunk == 0, (S, chunk)
+    n = S // chunk
+    a_c = a.reshape(B, n, chunk, di, ds).swapaxes(0, 1)
+    b_c = bx.reshape(B, n, chunk, di, ds).swapaxes(0, 1)
+    C_c = C_.reshape(B, n, chunk, ds).swapaxes(0, 1)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    def body(h, inputs):
+        ac, bc, cc = inputs
+        ca, cb = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h_all = ca * h[:, None] + cb                          # (B,chunk,di,ds)
+        y = jnp.einsum("blds,bls->bld", h_all, cc)
+        return h_all[:, -1], y
+
+    h_final, y = jax.lax.scan(body, h0, (a_c, b_c, C_c))
+    return y.swapaxes(0, 1).reshape(B, S, di), h_final
+
+
+def mamba_apply(cfg: ModelConfig, p, x):
+    """Full-sequence Mamba. Returns (y, {"conv", "h"}) final states."""
+    B, S, _ = x.shape
+    di = cfg.d_inner
+    xz = x @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_depthwise_conv(xs, p["conv_w"], p["conv_b"]))
+    a, bx, C_ = _ssm_inputs(cfg, p, xc)
+    h0 = jnp.zeros((B, di, cfg.mamba_d_state), jnp.float32)
+    chunk = MAMBA_CHUNK if S % MAMBA_CHUNK == 0 else S
+    y, h_final = _selective_scan_chunked(a, bx, C_, h0, chunk=chunk)
+    y = y + p["D"] * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ p["out_proj"]
+    cw = cfg.mamba_conv
+    conv_state = xs[:, -(cw - 1):] if S >= cw - 1 else jnp.pad(xs, ((0, 0), (cw - 1 - S, 0), (0, 0)))
+    return out, {"conv": conv_state, "h": h_final}
+
+
+def mamba_decode(cfg: ModelConfig, p, x, cache):
+    """x: (B, 1, d). O(1) recurrent step."""
+    B = x.shape[0]
+    xz = x @ p["in_proj"]
+    xs, z = jnp.split(xz, 2, axis=-1)                         # (B,1,di)
+    window = jnp.concatenate([cache["conv"], xs], axis=1)     # (B,cw,di)
+    xc = jnp.einsum("bcd,cd->bd", window, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(xc)[:, None]                             # (B,1,di)
+    a, bx, C_ = _ssm_inputs(cfg, p, xc)
+    h = a[:, 0] * cache["h"] + bx[:, 0]
+    y = jnp.einsum("bds,bs->bd", h, C_[:, 0])[:, None]
+    y = y + p["D"] * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ p["out_proj"], {"conv": window[:, 1:], "h": h}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, cfg: ModelConfig):
+    d, di, H = cfg.d_model, cfg.xlstm_d_inner, cfg.n_heads
+    dh = di // H
+    dt = cfg.param_dtype
+    ks = split_tree(key, 7)
+    return {
+        "up_proj": dense_init(ks[0], (d, 2 * di), dt),
+        "wq": dense_init(ks[1], (H, dh, dh), dt, fan_in=dh),
+        "wk": dense_init(ks[2], (H, dh, dh), dt, fan_in=dh),
+        "wv": dense_init(ks[3], (H, dh, dh), dt, fan_in=dh),
+        "wi": dense_init(ks[4], (di, H), jnp.float32),
+        "bi": jnp.zeros((H,), jnp.float32),
+        "wf": dense_init(ks[5], (di, H), jnp.float32),
+        "bf": jnp.linspace(3.0, 6.0, H).astype(jnp.float32),  # long-memory init
+        "ln": ones_init(None, (di,), dt),
+        "down_proj": dense_init(ks[6], (di, d), dt, fan_in=di),
+    }
+
+
+def mlstm_cache_init(cfg: ModelConfig, batch: int, dtype):
+    H = cfg.n_heads
+    dh = cfg.xlstm_d_inner // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_qkv_gates(cfg, p, x):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    di = cfg.xlstm_d_inner
+    dh = di // H
+    xz = x @ p["up_proj"]
+    xb, z = jnp.split(xz, 2, axis=-1)                         # (B,S,di)
+    xh = xb.reshape(B, S, H, dh)
+    q = jnp.einsum("bshd,hde->bshe", xh, p["wq"])
+    k = jnp.einsum("bshd,hde->bshe", xh, p["wk"]) * (dh ** -0.5)
+    v = jnp.einsum("bshd,hde->bshe", xh, p["wv"])
+    i_raw = xb.astype(jnp.float32) @ p["wi"] + p["bi"]        # (B,S,H)
+    f_raw = xb.astype(jnp.float32) @ p["wf"] + p["bf"]
+    log_f = -jax.nn.softplus(-f_raw)                          # log sigmoid
+    return q, k, v, i_raw, log_f, z, xb
+
+
+def _headnorm(cfg, h, scale):
+    """Per-head RMS norm then per-channel scale (xLSTM group norm)."""
+    hf = h.astype(jnp.float32)
+    var = jnp.mean(hf * hf, axis=-1, keepdims=True)
+    return (hf * jax.lax.rsqrt(var + cfg.norm_eps)), scale
+
+
+MLSTM_CHUNK = 1024  # quadratic-window size of the chunkwise form
+
+
+def mlstm_apply(cfg: ModelConfig, p, x):
+    """mLSTM full-sequence pass. Short sequences use the stabilized parallel
+    form (one S x S decay matrix); longer ones the *chunkwise* form (scan over
+    chunks carrying (C, n, m), quadratic only within a chunk) — O(S·c) memory
+    instead of O(S²), which is what lets the 32k prefill cells fit."""
+    S = x.shape[1]
+    if S > MLSTM_CHUNK and S % MLSTM_CHUNK == 0:
+        return _mlstm_chunkwise(cfg, p, x, chunk=MLSTM_CHUNK)
+    return _mlstm_parallel(cfg, p, x)
+
+
+def _mlstm_chunkwise(cfg: ModelConfig, p, x, *, chunk: int):
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    di = cfg.xlstm_d_inner
+    dh = di // H
+    q, k, v, i_raw, log_f, z, _ = _mlstm_qkv_gates(cfg, p, x)
+    n_chunks = S // chunk
+
+    def to_chunks(t, feat):
+        # (B,S,H,·) -> (n_chunks, B, H, chunk, ·)
+        t = t.swapaxes(1, 2).astype(jnp.float32)
+        t = t.reshape(B, H, n_chunks, chunk, -1) if feat else t.reshape(B, H, n_chunks, chunk)
+        return jnp.moveaxis(t, 2, 0)
+
+    qc, kc, vc = to_chunks(q, True), to_chunks(k, True), to_chunks(v, True)
+    ic = jnp.moveaxis(i_raw.swapaxes(1, 2).reshape(B, H, n_chunks, chunk), 2, 0)
+    lfc = jnp.moveaxis(log_f.swapaxes(1, 2).reshape(B, H, n_chunks, chunk), 2, 0)
+
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(carry, xs):
+        C_in, n_in, m_in = carry            # (B,H,dh,dh), (B,H,dh), (B,H)
+        qj, kj, vj, ij, lfj = xs            # (B,H,c,·)/(B,H,c)
+        F = jnp.cumsum(lfj, axis=-1)        # decay since chunk start, (B,H,c)
+        # Intra-chunk log weights + running max combining the carried state.
+        Dlog = F[..., :, None] - F[..., None, :] + ij[..., None, :]
+        Dlog = jnp.where(mask, Dlog, -jnp.inf)
+        m_intra = jnp.max(Dlog, axis=-1)                     # (B,H,c)
+        m_inter = m_in[..., None] + F                        # state path
+        m_t = jnp.maximum(jnp.maximum(m_intra, m_inter), -1e30)
+        Dp = jnp.exp(Dlog - m_t[..., None])
+        w_state = jnp.exp(m_inter - m_t)                     # (B,H,c)
+        Smat = jnp.einsum("bhqd,bhkd->bhqk", qj, kj) * Dp
+        num = jnp.einsum("bhqk,bhkd->bhqd", Smat, vj)
+        num = num + w_state[..., None] * jnp.einsum("bhde,bhqe->bhqd", C_in, qj)
+        den_vec = Smat.sum(-1) + w_state * jnp.einsum("bhd,bhqd->bhq", n_in, qj)
+        den = jnp.maximum(jnp.abs(den_vec), jnp.exp(-m_t))
+        h = num / den[..., None]                             # (B,H,c,dh)
+        # State update to chunk end.
+        F_L = F[..., -1:]
+        m_out = jnp.maximum(
+            m_in + F_L[..., 0],
+            jnp.max(F_L - F + ij, axis=-1),
+        )
+        w_old = jnp.exp(m_in + F_L[..., 0] - m_out)          # (B,H)
+        w_s = jnp.exp(F_L - F + ij - m_out[..., None])       # (B,H,c)
+        C_out = w_old[..., None, None] * C_in + jnp.einsum("bhs,bhsd,bhse->bhde", w_s, vj, kj)
+        n_out = w_old[..., None] * n_in + jnp.einsum("bhs,bhsd->bhd", w_s, kj)
+        return (C_out, n_out, m_out), h
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    m0 = jnp.full((B, H), -1e30, jnp.float32)
+    (C_T, n_T, m_T), hs = jax.lax.scan(body, (C0, n0, m0), (qc, kc, vc, ic, lfc))
+    h = jnp.moveaxis(hs, 0, 2).reshape(B, H, S, dh).swapaxes(1, 2)  # (B,S,H,dh)
+    hn, scale = _headnorm(cfg, h, p["ln"])
+    y = (hn.reshape(B, S, di) * scale.astype(jnp.float32)) * jax.nn.silu(
+        z.astype(jnp.float32)
+    )
+    out = y.astype(x.dtype) @ p["down_proj"]
+    return out, {"C": C_T, "n": n_T, "m": m_T}
+
+
+def _mlstm_parallel(cfg: ModelConfig, p, x):
+    """Stabilized parallel form. Returns (y, final (C, n, m) states)."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    di = cfg.xlstm_d_inner
+    q, k, v, i_raw, log_f, z, _ = _mlstm_qkv_gates(cfg, p, x)
+    qT, kT, vT = (t.swapaxes(1, 2).astype(jnp.float32) for t in (q, k, v))  # (B,H,S,dh)
+    iT = i_raw.swapaxes(1, 2)                                 # (B,H,S)
+    lfT = log_f.swapaxes(1, 2)
+    F = jnp.cumsum(lfT, axis=-1)                              # (B,H,S)
+    Dlog = F[..., :, None] - F[..., None, :] + iT[..., None, :]
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    Dlog = jnp.where(mask, Dlog, -jnp.inf)
+    m = jnp.max(Dlog, axis=-1)                                # (B,H,S)
+    m = jnp.maximum(m, -1e30)
+    Dp = jnp.exp(Dlog - m[..., None])
+    Smat = jnp.einsum("bhqd,bhkd->bhqk", qT, kT) * Dp
+    norm = jnp.maximum(jnp.abs(Smat.sum(-1)), jnp.exp(-m))    # (B,H,S)
+    h = jnp.einsum("bhqk,bhkd->bhqd", Smat, vT) / norm[..., None]
+    h = h.swapaxes(1, 2)                                      # (B,S,H,dh)
+    hn, scale = _headnorm(cfg, h, p["ln"])
+    y = (hn.reshape(B, S, di) * scale.astype(jnp.float32)) * jax.nn.silu(
+        z.astype(jnp.float32)
+    )
+    out = y.astype(x.dtype) @ p["down_proj"]
+    # Closed-form final recurrent state (for prefill -> decode hand-off).
+    m_T = m[..., -1]                                          # (B,H)
+    w_s = jnp.exp(F[..., -1:] - F + iT - m_T[..., None])      # (B,H,S)
+    C_T = jnp.einsum("bhs,bhsd,bhse->bhde", w_s, vT, kT)
+    n_T = jnp.einsum("bhs,bhsd->bhd", w_s, kT)
+    return out, {"C": C_T, "n": n_T, "m": m_T}
+
+
+def mlstm_decode(cfg: ModelConfig, p, x, cache):
+    B = x.shape[0]
+    H = cfg.n_heads
+    di = cfg.xlstm_d_inner
+    q, k, v, i_raw, log_f, z, _ = _mlstm_qkv_gates(cfg, p, x)
+    qh = q[:, 0].astype(jnp.float32)                          # (B,H,dh)
+    kh = k[:, 0].astype(jnp.float32)
+    vh = v[:, 0].astype(jnp.float32)
+    i_t = i_raw[:, 0]                                         # (B,H)
+    lf_t = log_f[:, 0]
+    m_new = jnp.maximum(lf_t + cache["m"], i_t)
+    f_p = jnp.exp(lf_t + cache["m"] - m_new)[..., None]
+    i_p = jnp.exp(i_t - m_new)[..., None]
+    C = f_p[..., None] * cache["C"] + i_p[..., None] * jnp.einsum("bhd,bhe->bhde", vh, kh)
+    n = f_p * cache["n"] + i_p * kh
+    num = jnp.einsum("bhde,bhe->bhd", C, qh)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qh)), jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(B, 1, H, -1)
+    hn, scale = _headnorm(cfg, h, p["ln"])
+    y = (hn.reshape(B, 1, di) * scale.astype(jnp.float32)) * jax.nn.silu(
+        z.astype(jnp.float32)
+    )
+    return y.astype(x.dtype) @ p["down_proj"], {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, cfg: ModelConfig):
+    d, H = cfg.d_model, cfg.n_heads
+    dh = d // H
+    dt = cfg.param_dtype
+    ks = split_tree(key, 3)
+    return {
+        "W": dense_init(ks[0], (d, 4 * d), dt),
+        "R": dense_init(ks[1], (H, dh, 4 * dh), jnp.float32, fan_in=dh),
+        "b": jnp.concatenate(
+            [jnp.zeros((d,)), jnp.full((d,), 3.0), jnp.zeros((2 * d,))]
+        ).astype(jnp.float32),                                # forget bias +3
+        "ln": ones_init(None, (d,), dt),
+        "ffn": {
+            "wg": dense_init(ks[2], (d, int(cfg.slstm_ffn_factor * d)), dt),
+            "wi": dense_init(jax.random.fold_in(ks[2], 1), (d, int(cfg.slstm_ffn_factor * d)), dt),
+            "wo": dense_init(
+                jax.random.fold_in(ks[2], 2), (int(cfg.slstm_ffn_factor * d), d), dt,
+                fan_in=int(cfg.slstm_ffn_factor * d),
+            ),
+        },
+    }
+
+
+def slstm_cache_init(cfg: ModelConfig, batch: int, dtype):
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -1e30, jnp.float32),
+    }
+
+
+def _slstm_step(cfg, p, state, wx_t):
+    """One sLSTM step. wx_t: (B, 4d) input pre-activations (+bias)."""
+    c, n, h, m = state
+    B = c.shape[0]
+    H = cfg.n_heads
+    d = cfg.d_model
+    dh = d // H
+    rec = jnp.einsum("bhd,hde->bhe", h.reshape(B, H, dh), p["R"]).reshape(B, 4 * d)
+    # R maps each head's h to that head's 4 gate slices; reorder to (4d,) gate
+    # layout: rec currently (B, H, 4*dh) flattened -> regroup per gate.
+    rec = rec.reshape(B, H, 4, dh).swapaxes(1, 2).reshape(B, 4 * d)
+    raw = wx_t + rec
+    i_r, f_r, z_r, o_r = jnp.split(raw, 4, axis=-1)
+    log_f = -jax.nn.softplus(-f_r)
+    m_new = jnp.maximum(log_f + m, i_r)
+    i_p = jnp.exp(i_r - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c = f_p * c + i_p * jnp.tanh(z_r)
+    n = f_p * n + i_p
+    h_new = jax.nn.sigmoid(o_r) * c / jnp.maximum(n, jnp.exp(-m_new))
+    return (c, n, h_new, m_new)
+
+
+def slstm_apply(cfg: ModelConfig, p, x):
+    """Sequential over time (inherent recurrence). Returns (y, states)."""
+    B, S, d = x.shape
+    wx = (x.astype(jnp.float32) @ p["W"].astype(jnp.float32)) + p["b"]  # hoisted
+    state0 = (
+        jnp.zeros((B, d), jnp.float32),
+        jnp.zeros((B, d), jnp.float32),
+        jnp.zeros((B, d), jnp.float32),
+        jnp.full((B, d), -1e30, jnp.float32),
+    )
+
+    def body(state, wx_t):
+        new = _slstm_step(cfg, p, state, wx_t)
+        return new, new[2]
+
+    state, hs = jax.lax.scan(body, state0, wx.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1)                                     # (B,S,d)
+    hf = h.reshape(B, S, cfg.n_heads, -1)
+    hn, scale = _headnorm(cfg, hf, p["ln"])
+    y = (hn.reshape(B, S, d) * scale.astype(jnp.float32)).astype(x.dtype)
+    # Gated post-FFN (~4/3 expansion, xLSTM block design).
+    ff = jax.nn.silu(y @ p["ffn"]["wg"]) * (y @ p["ffn"]["wi"])
+    out = y + ff @ p["ffn"]["wo"]
+    c, n, hh, m = state
+    return out, {"c": c, "n": n, "h": hh, "m": m}
+
+
+def slstm_decode(cfg: ModelConfig, p, x, cache):
+    B, S, d = x.shape
+    wx = (x[:, 0].astype(jnp.float32) @ p["W"].astype(jnp.float32)) + p["b"]
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    c, n, h, m = _slstm_step(cfg, p, state, wx)
+    hf = h.reshape(B, 1, cfg.n_heads, -1)
+    hn, scale = _headnorm(cfg, hf, p["ln"])
+    y = (hn.reshape(B, 1, d) * scale.astype(jnp.float32)).astype(x.dtype)
+    ff = jax.nn.silu(y @ p["ffn"]["wg"]) * (y @ p["ffn"]["wi"])
+    out = y + ff @ p["ffn"]["wo"]
+    return out, {"c": c, "n": n, "h": h, "m": m}

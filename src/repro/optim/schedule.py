@@ -1,0 +1,18 @@
+"""Learning-rate schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, total_steps: int, *, final_frac: float = 0.1):
+    t = jnp.clip(step.astype(jnp.float32) / max(1, total_steps), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return final_frac + (1.0 - final_frac) * cos
+
+
+def linear_warmup_cosine(step, warmup: int, total_steps: int, *, final_frac: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = s / max(1, warmup)
+    t = jnp.clip((s - warmup) / max(1, total_steps - warmup), 0.0, 1.0)
+    cos = final_frac + (1.0 - final_frac) * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return jnp.where(s < warmup, warm, cos)

@@ -1,0 +1,5 @@
+"""Traffic substrate: demand trace generators + the Section-IV link simulator."""
+from .traces import bursty_trace, constant_trace  # noqa: F401
+from .mirage import mirage_trace  # noqa: F401
+from .puffer import puffer_trace  # noqa: F401
+from . import linksim  # noqa: F401

@@ -1,0 +1,2 @@
+from .step import TrainConfig, loss_fn, make_train_step, train_step  # noqa: F401
+from .serve import make_decode_step, make_prefill  # noqa: F401

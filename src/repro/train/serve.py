@@ -1,0 +1,36 @@
+"""Serving steps: prefill + single-token decode (the dry-run's
+``serve_step``), plus a minimal batched request loop for the example."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.common import ModelConfig
+
+
+def make_prefill(cfg: ModelConfig):
+    return functools.partial(lm.prefill, cfg)
+
+
+def make_decode_step(cfg: ModelConfig):
+    """decode_step(params, token (B,1), cache) -> (logits, cache)."""
+    return functools.partial(lm.decode_step, cfg)
+
+
+def greedy_generate(cfg: ModelConfig, params, prompt, max_new: int, **kw):
+    """Batched greedy decoding for examples/tests (jit-compiled steps)."""
+    B, S = prompt.shape
+    cache = lm.init_cache(cfg, B, S + max_new)
+    prefill = jax.jit(functools.partial(lm.prefill, cfg))
+    step = jax.jit(functools.partial(lm.decode_step, cfg))
+    logits, cache = prefill(params, prompt, cache, **kw)  # (B, 1, V)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [tok]
+    for _ in range(max_new - 1):
+        logits, cache = step(params, tok, cache)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

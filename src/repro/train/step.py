@@ -1,0 +1,159 @@
+"""Training step: loss, grads, AdamW update, fault guards.
+
+* Cross-entropy over the vocab (sharded over 'model' — the logsumexp
+  reduction lowers to an all-reduce under GSPMD).
+* MoE aux losses and the DeepSeek-V3 MTP objective (0.3 weight, predicting
+  t+2) are folded in when the config has them.
+* VLM stub-patch positions are masked out of the loss.
+* Optional gradient accumulation (``microbatches``) via ``lax.scan``.
+* NaN-step skip (fault tolerance): a non-finite loss or grad-norm leaves
+  params/opt state untouched and raises the ``skipped`` metric instead of
+  poisoning the run — the watchdog counts these.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.common import ModelConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_update, linear_warmup_cosine
+
+MTP_WEIGHT = 0.3
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optim: AdamWConfig = AdamWConfig()
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    microbatches: int = 1
+    z_loss: float = 1e-4
+
+
+def _ce(logits, labels, mask):
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ce = (lse - gold) * mask
+    return ce.sum() / jnp.maximum(mask.sum(), 1.0), lse
+
+
+def loss_fn(
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    params,
+    tokens,
+    labels,
+    *,
+    patch_embeds=None,
+    frames=None,
+):
+    logits, extras = lm.forward(
+        cfg, params, tokens, patch_embeds=patch_embeds, frames=frames
+    )
+    mask = jnp.ones(tokens.shape, jnp.float32)
+    if cfg.n_patches:
+        pos = jnp.arange(tokens.shape[1])
+        mask = mask * (pos >= cfg.n_patches)[None, :]
+    loss, lse = _ce(logits, labels, mask)
+    total = loss + extras["aux"]
+    if tcfg.z_loss:
+        total = total + tcfg.z_loss * jnp.mean((lse * mask) ** 2)
+    if cfg.mtp and "mtp_logits" in extras:
+        # MTP predicts token t+2: logits index t aligns with labels[t+1].
+        mtp_loss, _ = _ce(extras["mtp_logits"], labels[:, 1:], mask[:, 1:])
+        total = total + MTP_WEIGHT * mtp_loss
+    return total, {"ce": loss, "aux": extras["aux"]}
+
+
+def train_step(
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    params,
+    opt_state,
+    tokens,
+    labels,
+    *,
+    patch_embeds=None,
+    frames=None,
+):
+    """One optimizer step. Returns (params, opt_state, metrics)."""
+    kw = {"patch_embeds": patch_embeds, "frames": frames}
+
+    if tcfg.microbatches > 1:
+        M = tcfg.microbatches
+        B = tokens.shape[0]
+        assert B % M == 0
+
+        def split(x):  # (B, ...) -> (M, B/M, ...)
+            return None if x is None else x.reshape(M, B // M, *x.shape[1:])
+
+        def micro(carry, xs):
+            acc, = carry
+            tk, lb, pe, fr = xs
+            (l, aux), g = jax.value_and_grad(
+                lambda p: loss_fn(
+                    cfg, tcfg, p, tk, lb, patch_embeds=pe, frames=fr
+                ),
+                has_aux=True,
+            )(params)
+            acc = jax.tree.map(lambda a, b: a + b, acc, g)
+            return (acc,), (l, aux)
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum,), (ls, auxs) = jax.lax.scan(
+            micro,
+            (zeros,),
+            (split(tokens), split(labels), split(patch_embeds), split(frames)),
+        )
+        grads = jax.tree.map(lambda g: g / M, gsum)
+        loss = ls.mean()
+        metrics = {"ce": auxs["ce"].mean(), "aux": auxs["aux"].mean()}
+    else:
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, tcfg, p, tokens, labels, **kw), has_aux=True
+        )(params)
+
+    # Communicate gradients in the parameters' dtype (bf16 on the wire, f32
+    # math inside AdamW) and pinned to the parameters' shardings, so the
+    # gradient reduction lowers to a reduce-scatter onto the owning shards
+    # instead of a full f32 all-reduce (see dist.act_shard).
+    from repro.dist.act_shard import constrain_like_params
+
+    grads = jax.tree.map(lambda g, p: g.astype(p.dtype), grads, params)
+    grads = constrain_like_params(grads)
+
+    # step+1: the schedule is evaluated for the step being taken (step 0
+    # would otherwise get lr=0 during warmup).
+    lr_scale = linear_warmup_cosine(
+        opt_state["step"] + 1, tcfg.warmup_steps, tcfg.total_steps
+    )
+    new_params, new_opt, om = adamw_update(params, grads, opt_state, tcfg.optim, lr_scale)
+
+    # NaN-step skip: keep old state on non-finite loss/grads.
+    ok = jnp.isfinite(loss) & jnp.isfinite(om["grad_norm"])
+    new_params = jax.tree.map(lambda n, o: jnp.where(ok, n, o), new_params, params)
+    new_opt = jax.tree.map(lambda n, o: jnp.where(ok, n, o), new_opt, opt_state)
+
+    metrics = dict(metrics)
+    metrics.update(
+        loss=loss,
+        grad_norm=om["grad_norm"],
+        lr_scale=lr_scale,
+        skipped=(~ok).astype(jnp.int32),
+    )
+    return new_params, new_opt, metrics
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    """Partially-applied train_step suitable for jax.jit(lower)."""
+    return functools.partial(train_step, cfg, tcfg)
+
+
+def init_train_state(cfg: ModelConfig, tcfg: TrainConfig, key):
+    params = lm.init_params(cfg, key)
+    return params, adamw_init(params, tcfg.optim)

@@ -1,0 +1,24 @@
+"""Shared test configuration.
+
+NOTE: XLA_FLAGS / device-count forcing is deliberately NOT set here — smoke
+tests and benches must see the single real CPU device. Multi-device tests
+spawn subprocesses with their own XLA_FLAGS (see tests/test_dist.py).
+"""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, settings
+
+# Keep hypothesis fast and deterministic in CI.
+settings.register_profile(
+    "ci",
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+    derandomize=True,
+)
+settings.load_profile("ci")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

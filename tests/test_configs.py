@@ -1,0 +1,102 @@
+"""Config-registry and shape-cell contract tests (deliverable f plumbing)."""
+import pytest
+
+from repro.configs import ARCH_IDS, REGISTRY, get_config, reduce_config
+from repro.launch.dryrun import LONG_OK, MICROBATCHES, SHAPES, cell_supported
+from repro.models.common import LayerKind
+
+
+def test_registry_complete():
+    assert len(ARCH_IDS) == 10
+    expected = {
+        "mixtral-8x7b", "deepseek-v3-671b", "xlstm-1.3b", "deepseek-7b",
+        "tinyllama-1.1b", "h2o-danube-3-4b", "yi-6b", "whisper-tiny",
+        "internvl2-2b", "jamba-v0.1-52b",
+    }
+    assert set(ARCH_IDS) == expected
+
+
+def test_unknown_arch_raises():
+    with pytest.raises(KeyError):
+        get_config("gpt-5")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_exact_assigned_dims(arch):
+    """The published dims from the assignment table, verbatim."""
+    want = {
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "deepseek-v3-671b": (61, 7168, 128, 128, 2048, 129280),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+        "deepseek-7b": (30, 4096, 32, 32, 11008, 102400),
+        "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+        "h2o-danube-3-4b": (24, 3840, 32, 8, 10240, 32000),
+        "yi-6b": (32, 4096, 32, 4, 11008, 64000),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+        "internvl2-2b": (24, 2048, 16, 8, 8192, 92553),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+    }[arch]
+    cfg = get_config(arch)
+    d_ff = cfg.moe.d_ff_expert if arch in ("mixtral-8x7b", "jamba-v0.1-52b") else cfg.d_ff
+    if arch == "deepseek-v3-671b":
+        d_ff = cfg.moe.d_ff_expert
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, d_ff, cfg.vocab)
+    if arch == "xlstm-1.3b":
+        got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff, cfg.vocab)
+    assert got == want, (got, want)
+
+
+def test_moe_configs():
+    m = get_config("mixtral-8x7b").moe
+    assert (m.n_experts, m.top_k) == (8, 2)
+    d = get_config("deepseek-v3-671b").moe
+    assert (d.n_experts, d.top_k, d.n_shared, d.router) == (256, 8, 1, "sigmoid")
+    j = get_config("jamba-v0.1-52b").moe
+    assert (j.n_experts, j.top_k) == (16, 2)
+
+
+def test_jamba_interleave():
+    """1:7 attention:mamba, attention at position 4 of each 8-layer period,
+    MoE on every other layer."""
+    kinds = get_config("jamba-v0.1-52b").layer_kinds()
+    assert len(kinds) == 32
+    assert sum(k.mixer == "gqa" for k in kinds) == 4
+    assert sum(k.mixer == "mamba" for k in kinds) == 28
+    assert all(kinds[i].mixer == "gqa" for i in (4, 12, 20, 28))
+    assert sum(k.ffn == "moe" for k in kinds) == 16
+
+
+def test_xlstm_ratio():
+    kinds = get_config("xlstm-1.3b").layer_kinds()
+    assert sum(k.mixer == "mlstm" for k in kinds) == 42
+    assert sum(k.mixer == "slstm" for k in kinds) == 6
+
+
+def test_shape_cells_and_skip_rule():
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+    assert SHAPES["train_4k"] == {"kind": "train", "seq": 4096, "batch": 256}
+    assert SHAPES["long_500k"] == {"kind": "decode", "seq": 524288, "batch": 1}
+    # long_500k runs ONLY for sub-quadratic-state archs.
+    assert LONG_OK == {"xlstm-1.3b", "jamba-v0.1-52b", "mixtral-8x7b", "h2o-danube-3-4b"}
+    ok, why = cell_supported("yi-6b", "long_500k")
+    assert not ok and "full-attention" in why
+    assert cell_supported("jamba-v0.1-52b", "long_500k")[0]
+    # 40 cells total: 34 runnable + 6 skipped (x2 meshes in the sweep).
+    runnable = sum(
+        cell_supported(a, s)[0] for a in ARCH_IDS for s in SHAPES
+    )
+    assert runnable == 34
+
+
+def test_every_arch_has_microbatch_setting():
+    assert set(MICROBATCHES) == set(ARCH_IDS)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduce_config_preserves_family(arch):
+    cfg, red = get_config(arch), reduce_config(get_config(arch))
+    assert red.family == cfg.family
+    assert {k.mixer for k in red.layer_kinds()} == {k.mixer for k in cfg.layer_kinds()}
+    assert (red.moe is None) == (cfg.moe is None)
+    assert (red.mla is None) == (cfg.mla is None)
+    assert red.n_layers <= cfg.n_layers

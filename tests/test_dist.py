@@ -1,0 +1,261 @@
+"""Distribution layer tests.
+
+Multi-device tests run in a SUBPROCESS with XLA_FLAGS forcing 8 host devices
+(the main test process must keep seeing 1 device — see conftest). The
+subprocess scripts assert and exit nonzero on failure.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.dist.hlo_analysis import analyze, parse_module
+from repro.dist.telemetry import collective_bytes, parse_collectives
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_multidevice(script: str, n_devices: int = 8):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(script)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr[-4000:]}"
+    return out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Collectives (hierarchical + compressed) vs plain psum
+# ---------------------------------------------------------------------------
+
+
+def test_hierarchical_and_compressed_all_reduce():
+    run_multidevice("""
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from repro.launch.mesh import make_host_mesh
+        from repro.dist.collectives import sync_grads
+
+        mesh = make_host_mesh(pod=2, data=2, model=2)
+        rng = np.random.default_rng(0)
+        # Per-device distinct grads: simulate with a replicated base that each
+        # mode must average identically (sync averages over pod x data).
+        grads = {
+            "w": jnp.asarray(rng.normal(size=(64, 32)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(17,)), jnp.float32),
+        }
+        ref, _ = sync_grads(grads, mesh, mode="direct")
+        hier, _ = sync_grads(grads, mesh, mode="hierarchical")
+        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(hier)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6)
+
+        comp, err = sync_grads(grads, mesh, mode="compressed")
+        for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(comp)):
+            a, b = np.asarray(a), np.asarray(b)
+            # int8 with per-row scales: within one quantization step.
+            assert np.max(np.abs(a - b)) < np.abs(a).max() / 64, np.max(np.abs(a-b))
+        assert err is not None
+        # Error feedback: feeding the same grads again corrects the bias —
+        # the two-step average is closer than one step.
+        comp2, err2 = sync_grads(grads, mesh, mode="compressed", err_state=err)
+        two_step = jax.tree.map(lambda x, y: (np.asarray(x) + np.asarray(y)) / 2, comp, comp2)
+        for a, b, c in zip(jax.tree.leaves(ref), jax.tree.leaves(two_step), jax.tree.leaves(comp)):
+            err2s = np.abs(np.asarray(a) - b).mean()
+            err1s = np.abs(np.asarray(a) - np.asarray(c)).mean()
+            assert err2s <= err1s * 1.05
+        print("OK")
+    """)
+
+
+def test_compressed_cuts_cross_pod_bytes():
+    """Compiled HLO: the compressed path's pod-axis collectives move ~4x
+    fewer bytes than the full-precision hierarchical path."""
+    out = run_multidevice("""
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from repro.launch.mesh import make_host_mesh
+        from repro.dist.collectives import sync_grads, init_error_state
+        from repro.dist.telemetry import parse_collectives
+
+        # data=4 vs pod=2 so pod-axis collectives are unambiguous (group==2).
+        mesh = make_host_mesh(pod=2, data=4, model=1)
+        grads = {"w": jnp.zeros((256, 256), jnp.float32)}
+
+        def pod_bytes(fn, *args):
+            c = jax.jit(fn).lower(*args).compile()
+            ops = parse_collectives(c.as_text())
+            return sum(o.wire_bytes for o in ops if o.group_size == 2)
+
+        hier = lambda g: sync_grads(g, mesh, mode="hierarchical")[0]
+        err0 = init_error_state(grads, mesh)
+        comp = lambda g, e: sync_grads(g, mesh, mode="compressed", err_state=e)[0]
+        bh = pod_bytes(hier, grads)
+        bc = pod_bytes(comp, grads, err0)
+        print("hier", bh, "comp", bc)
+        assert 0 < bc < bh / 2.5, (bh, bc)
+    """)
+    assert "OK" in out or "hier" in out
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules
+# ---------------------------------------------------------------------------
+
+
+def test_param_shardings_divisibility_fallback():
+    run_multidevice("""
+        import jax
+        from jax.sharding import PartitionSpec as P
+        from repro.launch.mesh import make_host_mesh
+        from repro.dist.sharding import param_shardings
+        from repro.models import lm
+        from repro.configs import get_config, reduce_config
+
+        mesh = make_host_mesh(pod=2, data=2, model=2)
+        cfg = get_config("mixtral-8x7b")
+        abs_p = lm.abstract_params(cfg)
+        sh = param_shardings(mesh, abs_p)
+        flat = jax.tree_util.tree_flatten_with_path(sh)[0]
+        for path, s in flat:
+            # Every sharding must be valid for its leaf (constructing the
+            # OpSharding would raise otherwise) and norms stay replicated.
+            ps = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+            if ps.endswith("norm1") or ps.endswith("norm2"):
+                assert s.spec == P(), (ps, s.spec)
+        # Expert weights: E=8 divides pod*data=4 -> sharded on dim -3.
+        wg = sh["segments"][0][0]["ffn"]["wg"]
+        assert wg.spec[1] in (("pod", "data"), "data"), wg.spec
+        print("OK")
+    """)
+
+
+def test_cache_shardings_long_context():
+    run_multidevice("""
+        import jax
+        from repro.launch.mesh import make_host_mesh
+        from repro.dist.sharding import cache_shardings
+        from repro.models import lm
+        from repro.configs import get_config
+
+        mesh = make_host_mesh(pod=2, data=2, model=2)
+        cfg = get_config("h2o-danube-3-4b")  # SWA arch
+        cache = jax.eval_shape(lambda: lm.init_cache(cfg, 1, 524288))
+        sh = cache_shardings(mesh, cache, seq_axes=("data",))
+        k = sh["segments"][0][0]["k"]
+        # batch=1 unshardable; kv heads 8 divide model=2; ring W=4096.
+        assert k.spec[3] == "model", k.spec
+        print("OK")
+    """)
+
+
+# ---------------------------------------------------------------------------
+# Telemetry + HLO analysis
+# ---------------------------------------------------------------------------
+
+
+def test_telemetry_parses_known_collectives():
+    hlo = """
+HloModule test, is_scheduled=true
+
+ENTRY %main (p: f32[64,64]) -> f32[64,64] {
+  %p = f32[64,64]{1,0} parameter(0)
+  %ag = f32[128,64]{1,0} all-gather(%p), channel_id=1, replica_groups=[4,2]<=[8], dimensions={0}, use_global_device_ids=true
+  %ar = f32[64,64]{1,0} all-reduce(%p), channel_id=2, replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  ROOT %cp = f32[64,64]{1,0} collective-permute(%p), channel_id=3, source_target_pairs={{0,1},{1,0}}
+}
+"""
+    ops = parse_collectives(hlo)
+    kinds = {o.kind: o for o in ops}
+    assert kinds["all-gather"].group_size == 2
+    assert kinds["all-gather"].operand_bytes == 128 * 64 * 4 // 2
+    assert kinds["all-reduce"].group_size == 4
+    assert kinds["all-reduce"].operand_bytes == 64 * 64 * 4
+    assert kinds["collective-permute"].wire_bytes == 64 * 64 * 4
+    agg = collective_bytes(hlo)
+    assert agg["count"] == 3
+
+
+def test_hlo_analysis_counts_loop_trip_counts():
+    import jax.numpy as jnp
+
+    w = jnp.zeros((128, 128), jnp.float32)
+    x = jnp.zeros((128, 128), jnp.float32)
+
+    def body(c, _):
+        return jnp.tanh(c @ w), None
+
+    scanned = jax.jit(lambda x: jax.lax.scan(body, x, None, length=7)[0])
+    unrolled = jax.jit(lambda x: [x := jnp.tanh(x @ w) for _ in range(7)][-1])
+    fs = analyze(scanned.lower(x).compile().as_text())["flops"]
+    fu = analyze(unrolled.lower(x).compile().as_text())["flops"]
+    assert abs(fs - fu) / fu < 0.05, (fs, fu)
+    # And both ~= 7 matmuls.
+    assert abs(fs - 7 * 2 * 128**3) / (7 * 2 * 128**3) < 0.1
+
+
+def test_hlo_analysis_dot_flops_exact():
+    import jax.numpy as jnp
+
+    a = jnp.zeros((64, 256), jnp.float32)
+    b = jnp.zeros((256, 32), jnp.float32)
+    c = jax.jit(lambda a, b: a @ b).lower(a, b).compile()
+    r = analyze(c.as_text())
+    want = 2 * 64 * 256 * 32
+    assert abs(r["flops"] - want) / want < 0.05
+
+
+# ---------------------------------------------------------------------------
+# Planner controller == batch reference
+# ---------------------------------------------------------------------------
+
+
+def test_incremental_controller_matches_batch():
+    import numpy as np
+
+    from repro.core.costmodel import hourly_cost_series
+    from repro.core.planner import ToggleCCIController
+    from repro.core.pricing import make_scenario
+    from repro.core.togglecci import ON, run_togglecci
+    from repro.traffic.traces import bursty_trace
+
+    params = make_scenario("gcp", "aws")
+    d = bursty_trace(horizon=4000, seed=9).sum(axis=1)
+    costs = hourly_cost_series(params, d)
+    ref = run_togglecci(params, d, costs=costs)
+    ctl = ToggleCCIController(params)
+    served = np.array(
+        [ctl.update(costs.vpn[t], costs.cci[t]) for t in range(len(d))]
+    )
+    np.testing.assert_array_equal((served == ON).astype(int), ref.x)
+
+
+def test_planner_low_demand_stays_compressed_vpn():
+    from repro.core.planner import InterconnectPlanner
+
+    pl = InterconnectPlanner()
+    for _ in range(500):
+        pl.feed_hour(1e9)  # 1 GB/hour — far below any DCI breakeven
+    rep = pl.report()
+    assert rep.on_fraction == 0.0
+    assert rep.total_cost <= rep.cost_always_cci
+
+
+def test_planner_high_demand_leases_link():
+    from repro.core.planner import InterconnectPlanner
+
+    pl = InterconnectPlanner()
+    for _ in range(2000):
+        # 200 TB/h of gradient traffic: the dedicated link beats even the
+        # compressed pay-per-GB path.
+        pl.feed_hour(200e12)
+    rep = pl.report()
+    assert rep.on_fraction > 0.5
+    assert rep.total_cost < rep.cost_always_vpn

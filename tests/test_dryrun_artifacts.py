@@ -1,0 +1,41 @@
+"""Deliverable-(e) artifact guard: if a dry-run results directory exists,
+every (arch × shape × mesh) cell must be present and either ok or
+skipped-by-rule, with the roofline inputs populated. Skips when the sweep
+hasn't been run (artifacts are generated, not committed source)."""
+import glob
+import json
+import os
+
+import pytest
+
+from repro.configs import ARCH_IDS
+from repro.launch.dryrun import SHAPES, cell_supported
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+@pytest.mark.skipif(
+    not os.path.isdir(DRYRUN_DIR) or not glob.glob(os.path.join(DRYRUN_DIR, "*.json")),
+    reason="dry-run sweep not present (run repro.launch.dryrun first)",
+)
+def test_all_cells_present_and_green():
+    missing, failed = [], []
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            for mesh in ("single", "multi"):
+                path = os.path.join(DRYRUN_DIR, f"{arch}__{shape}__{mesh}.json")
+                if not os.path.exists(path):
+                    missing.append((arch, shape, mesh))
+                    continue
+                rec = json.load(open(path))
+                ok_expected, _ = cell_supported(arch, shape)
+                if ok_expected:
+                    if rec.get("status") != "ok":
+                        failed.append((arch, shape, mesh, rec.get("status")))
+                    else:
+                        assert rec["hlo_flops_per_device"] > 0, (arch, shape, mesh)
+                        assert "collectives" in rec and "memory" in rec
+                else:
+                    assert rec.get("status") == "skipped", (arch, shape, mesh)
+    assert not missing, f"missing cells: {missing}"
+    assert not failed, f"failed cells: {failed}"

@@ -1,0 +1,218 @@
+"""Per-kernel allclose validation against the pure-jnp oracles (ref.py).
+
+Every Pallas kernel is executed in interpret mode (kernel body runs on CPU)
+and swept over shapes/dtypes per the deliverable contract.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.int8_quant import int8_dequantize, int8_quantize
+from repro.kernels.rmsnorm import rmsnorm as rmsnorm_kernel
+from repro.kernels.tiered_cost import tiered_cost as tiered_cost_kernel
+
+
+def _rand(rng, shape, dtype):
+    x = rng.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+ATT_SHAPES = [
+    # (B, Hq, Hkv, Sq, Skv, D)
+    (1, 2, 2, 128, 128, 64),     # MHA square
+    (2, 4, 2, 128, 256, 64),     # GQA, rectangular
+    (1, 8, 1, 256, 256, 128),    # MQA
+    (1, 2, 2, 384, 384, 32),     # 3-block
+]
+
+
+@pytest.mark.parametrize("shape", ATT_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_ref(shape, dtype, causal):
+    B, Hq, Hkv, Sq, Skv, D = shape
+    if causal and Sq > Skv:
+        pytest.skip("causal requires Sq <= Skv here")
+    rng = np.random.default_rng(0)
+    q = _rand(rng, (B, Hq, Sq, D), dtype)
+    k = _rand(rng, (B, Hkv, Skv, D), dtype)
+    v = _rand(rng, (B, Hkv, Skv, D), dtype)
+    q_offset = Skv - Sq if causal else 0
+    out = flash_attention(q, k, v, causal=causal, q_offset=q_offset, interpret=True)
+    want = ref.attention(q, k, v, causal=causal, q_offset=q_offset)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+@pytest.mark.parametrize("window", [128, 256])
+def test_flash_attention_sliding_window(window):
+    rng = np.random.default_rng(1)
+    q = _rand(rng, (1, 2, 384, 64), jnp.float32)
+    k = _rand(rng, (1, 2, 384, 64), jnp.float32)
+    v = _rand(rng, (1, 2, 384, 64), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window, interpret=True)
+    want = ref.attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_decode_offset():
+    """Prefill/decode equivalence: last-token attention with q_offset equals
+    the last row of full attention."""
+    rng = np.random.default_rng(2)
+    S = 256
+    q = _rand(rng, (1, 4, S, 64), jnp.float32)
+    k = _rand(rng, (1, 4, S, 64), jnp.float32)
+    v = _rand(rng, (1, 4, S, 64), jnp.float32)
+    full = ref.attention(q, k, v, causal=True)
+    last_q = q[:, :, S - 128 :, :]
+    out = flash_attention(last_q, k, v, causal=True, q_offset=S - 128, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(full[:, :, S - 128 :]), atol=2e-5, rtol=2e-5
+    )
+
+
+def test_chunked_xla_matches_naive():
+    """The non-TPU production path is itself validated against the oracle."""
+    rng = np.random.default_rng(3)
+    q = _rand(rng, (2, 4, 100, 64), jnp.float32)
+    k = _rand(rng, (2, 2, 260, 64), jnp.float32)
+    v = _rand(rng, (2, 2, 260, 64), jnp.float32)
+    for window in (0, 64):
+        out = ref.attention_xla_chunked(
+            q, k, v, causal=True, window=window, q_offset=160, chunk=64
+        )
+        want = ref.attention(q, k, v, causal=True, window=window, q_offset=160)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5, rtol=1e-5)
+
+
+def test_ops_attention_dispatch_cpu():
+    rng = np.random.default_rng(4)
+    q = _rand(rng, (1, 2, 64, 32), jnp.float32)
+    k = _rand(rng, (1, 2, 64, 32), jnp.float32)
+    v = _rand(rng, (1, 2, 64, 32), jnp.float32)
+    out = ops.attention(q, k, v, causal=True)
+    want = ref.attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5, rtol=1e-5)
+
+
+def test_ops_attention_interpret_pad_path():
+    """force_interpret routes through the Pallas kernel with q padding."""
+    rng = np.random.default_rng(5)
+    q = _rand(rng, (1, 2, 200, 64), jnp.float32)   # 200 % 128 != 0
+    k = _rand(rng, (1, 2, 256, 64), jnp.float32)
+    v = _rand(rng, (1, 2, 256, 64), jnp.float32)
+    with ops.force_interpret():
+        out = ops.attention(q, k, v, causal=True, q_offset=56)
+    want = ref.attention(q, k, v, causal=True, q_offset=56)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(128, 512), (256, 1024), (2, 128, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_matches_ref(shape, dtype):
+    rng = np.random.default_rng(6)
+    x = _rand(rng, shape, dtype)
+    w = _rand(rng, shape[-1:], dtype)
+    out = rmsnorm_kernel(x, w, interpret=True)
+    want = ref.rmsnorm(x, w)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+# ---------------------------------------------------------------------------
+# int8 quant
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(256, 128), (512, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_int8_roundtrip_matches_ref(shape, dtype):
+    rng = np.random.default_rng(7)
+    x = _rand(rng, shape, dtype) * 3.0
+    q, s = int8_quantize(x, interpret=True)
+    qr, sr = ref.int8_quantize(x)
+    # Exact equality up to rounding ties: a 1-ULP scale difference can flip
+    # values sitting exactly at x/scale = n + 0.5, so allow |Δq| <= 1 on a
+    # vanishing fraction of entries.
+    dq = np.abs(np.asarray(q, np.int32) - np.asarray(qr, np.int32))
+    assert dq.max() <= 1
+    assert (dq != 0).mean() < 1e-3
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+    y = int8_dequantize(q, s, interpret=True)
+    yr = ref.int8_dequantize(qr, sr)
+    # Tie-flipped entries differ by exactly one quantization step.
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(yr), atol=float(np.asarray(s).max()) * 1.01
+    )
+    # Quantization error bound: |x - deq| <= scale/2 per element.
+    err = np.abs(np.asarray(x, np.float32) - np.asarray(y))
+    bound = np.asarray(s) * 0.5 + 1e-6
+    assert (err <= bound).all()
+
+
+def test_int8_quant_zero_rows():
+    x = jnp.zeros((256, 64), jnp.float32)
+    q, s = int8_quantize(x, interpret=True)
+    assert not np.isnan(np.asarray(s)).any()
+    np.testing.assert_array_equal(np.asarray(q), 0)
+
+
+# ---------------------------------------------------------------------------
+# tiered cost
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("T,P", [(512, 1), (1024, 4), (8704, 8)])
+def test_tiered_cost_matches_ref_and_core(T, P):
+    from repro.core.costmodel import tiered_marginal_cost_np
+    from repro.core.pricing import AWS_EGRESS_INTERNET as tier
+
+    rng = np.random.default_rng(8)
+    d = rng.uniform(0, 500, size=(T, P)).astype(np.float32)
+    cum = (np.cumsum(d, axis=0) - d).astype(np.float32)
+    out = tiered_cost_kernel(
+        jnp.asarray(cum), jnp.asarray(d), tier.bounds_gb, tier.rates, interpret=True
+    )
+    # Tight against the same-precision (f32) jnp oracle...
+    want32 = ref.tiered_cost(
+        jnp.asarray(cum), jnp.asarray(d),
+        jnp.asarray([b if np.isfinite(b) else 1e30 for b in tier.bounds_gb], jnp.float32),
+        jnp.asarray(tier.rates, jnp.float32),
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want32), rtol=1e-6, atol=1e-6)
+    # ...and loose against the float64 core reference (f32 resolution at
+    # month-cumulative volumes ~2e6 GB is ~0.25 GB -> cents-level cost noise).
+    want64 = tiered_marginal_cost_np(tier, cum, d)
+    np.testing.assert_allclose(np.asarray(out), want64, atol=2e-2)
+
+
+def test_ops_tiered_cost_dispatch():
+    from repro.core.pricing import GCP_EGRESS_PREMIUM as tier
+
+    rng = np.random.default_rng(9)
+    d = jnp.asarray(rng.uniform(0, 100, size=(300, 2)), jnp.float32)  # 300 % 512 != 0
+    cum = jnp.cumsum(d, axis=0) - d
+    out = ops.tiered_cost(cum, d, tier.bounds_gb, tier.rates)
+    want = ref.tiered_cost(
+        cum, d,
+        jnp.asarray([b if np.isfinite(b) else 1e30 for b in tier.bounds_gb], jnp.float32),
+        jnp.asarray(tier.rates, jnp.float32),
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-6)

@@ -1,0 +1,119 @@
+"""Unit + property tests for the pricing catalogs (paper §V challenge (c))."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from repro.core.pricing import (
+    AWS_EGRESS_INTERNET,
+    AZURE_EGRESS_INTERNET,
+    GCP_EGRESS_PREMIUM,
+    GCP_EGRESS_STANDARD,
+    CostParams,
+    TieredRate,
+    breakeven_rate_gb_per_hour,
+    flat_rate,
+    make_scenario,
+)
+
+ALL_TIERS = [
+    AWS_EGRESS_INTERNET,
+    GCP_EGRESS_PREMIUM,
+    GCP_EGRESS_STANDARD,
+    AZURE_EGRESS_INTERNET,
+]
+
+
+def test_catalog_tiers_decreasing():
+    # Paper: "tiered egress pricing, where the per-GB cost decreases with
+    # higher usage".
+    for tier in ALL_TIERS:
+        assert all(r1 >= r2 for r1, r2 in zip(tier.rates, tier.rates[1:]))
+
+
+@pytest.mark.parametrize("tier", ALL_TIERS)
+def test_marginal_cost_basics(tier):
+    assert tier.marginal_cost(0.0, 0.0) == 0.0
+    assert tier.marginal_cost(0.0, 100.0) == pytest.approx(100.0 * tier.rates[0])
+    # Deep in the last tier the marginal rate is the last rate.
+    deep = tier.bounds_gb[-2] if len(tier.bounds_gb) > 1 else 0.0
+    assert tier.marginal_cost(deep + 1e6, 50.0) == pytest.approx(50.0 * tier.rates[-1])
+
+
+@given(
+    start=st.floats(0, 1e6),
+    a=st.floats(0, 1e5),
+    b=st.floats(0, 1e5),
+)
+def test_marginal_cost_additivity(start, a, b):
+    """cost(start, a+b) == cost(start, a) + cost(start+a, b) — path independence."""
+    tier = AWS_EGRESS_INTERNET
+    lhs = tier.marginal_cost(start, a + b)
+    rhs = tier.marginal_cost(start, a) + tier.marginal_cost(start + a, b)
+    assert lhs == pytest.approx(rhs, rel=1e-9, abs=1e-9)
+
+
+@given(start=st.floats(0, 1e6), add=st.floats(0, 1e6))
+def test_marginal_cost_bounds(start, add):
+    """Marginal cost sits between the cheapest- and dearest-rate envelopes,
+    and later starts never cost more (decreasing tiers => concavity)."""
+    tier = GCP_EGRESS_PREMIUM
+    c = tier.marginal_cost(start, add)
+    assert min(tier.rates) * add - 1e-9 <= c <= max(tier.rates) * add + 1e-9
+    assert tier.marginal_cost(start + 123.0, add) <= c + 1e-9
+
+
+def test_flat_rate():
+    fr = flat_rate(0.02)
+    assert fr.flat()
+    assert fr.marginal_cost(12345.0, 10.0) == pytest.approx(0.2)
+
+
+def test_tieredrate_validation():
+    with pytest.raises(AssertionError):
+        TieredRate((10.0, 5.0, math.inf), (0.1, 0.2, 0.3))  # unsorted
+    with pytest.raises(AssertionError):
+        TieredRate((10.0,), (0.1,))  # last bound not inf
+
+
+@pytest.mark.parametrize("src,dst", [("gcp", "aws"), ("aws", "gcp"), ("gcp", "azure"), ("azure", "gcp")])
+def test_make_scenario_directions(src, dst):
+    p = make_scenario(src, dst)
+    assert p.L_cci > 0 and p.V_cci >= 0 and p.L_vpn > 0
+    assert p.c_cci < p.vpn_tier.rates[-1], "CCI per-GB must undercut even the best VPN tier"
+    assert p.D == 72 and p.T_cci == 168 and p.h == 168
+    assert p.theta1 == 0.9 and p.theta2 == 1.1
+
+
+def test_intercontinental_costs_more():
+    near = make_scenario("gcp", "aws")
+    far = make_scenario("gcp", "aws", intercontinental=True)
+    assert far.c_cci > near.c_cci
+    assert far.vpn_tier.rates[0] > near.vpn_tier.rates[0]
+
+
+def test_colocation_far_raises_cci_rate_only():
+    # Fig. 9: far colocation raises the CCI egress (backbone traversal), not VPN.
+    near = make_scenario("gcp", "aws")
+    far = make_scenario("gcp", "aws", colocation_far=True)
+    assert far.c_cci > near.c_cci
+    assert far.vpn_tier == near.vpn_tier
+
+
+def test_breakeven_is_a_fixed_point():
+    p = make_scenario("gcp", "aws")
+    r = breakeven_rate_gb_per_hour(p)
+    assert r > 0
+    month = r * p.hours_per_month
+    vpn_hr = p.L_vpn + p.vpn_tier.marginal_cost(0, month) / p.hours_per_month
+    cci_hr = p.L_cci + p.V_cci + p.c_cci * r
+    assert vpn_hr == pytest.approx(cci_hr, rel=1e-3)
+
+
+def test_costparams_validation():
+    with pytest.raises(AssertionError):
+        CostParams(1, 0, 0.02, 0.1, flat_rate(0.1), theta1=1.2, theta2=1.1)
+    with pytest.raises(AssertionError):
+        CostParams(1, 0, 0.02, 0.1, flat_rate(0.1), h=0)

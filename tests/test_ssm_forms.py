@@ -1,0 +1,121 @@
+"""Equivalence of the recurrent / parallel / chunkwise SSM forms — the
+correctness backbone of the xLSTM and Jamba cells (train uses parallel or
+chunkwise, decode uses recurrent; they must be the same function)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduce_config
+from repro.models import ssm
+
+CFG_X = reduce_config(get_config("xlstm-1.3b"))
+CFG_J = reduce_config(get_config("jamba-v0.1-52b"))
+KEY = jax.random.PRNGKey(0)
+
+
+def test_mlstm_chunkwise_matches_parallel():
+    p = ssm.mlstm_init(KEY, CFG_X)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 96, CFG_X.d_model))
+    y1, s1 = ssm._mlstm_parallel(CFG_X, p, x)
+    for chunk in (8, 16, 48):
+        y2, s2 = ssm._mlstm_chunkwise(CFG_X, p, x, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4, rtol=2e-4)
+        for k in ("C", "n", "m"):
+            np.testing.assert_allclose(
+                np.asarray(s1[k]), np.asarray(s2[k]), atol=2e-4, rtol=2e-3
+            )
+
+
+def test_mlstm_recurrent_matches_parallel():
+    """Step-by-step decode over the same tokens == parallel form outputs."""
+    p = ssm.mlstm_init(KEY, CFG_X)
+    B, S = 2, 24
+    x = jax.random.normal(jax.random.PRNGKey(2), (B, S, CFG_X.d_model))
+    y_par, _ = ssm._mlstm_parallel(CFG_X, p, x)
+    cache = ssm.mlstm_cache_init(CFG_X, B, jnp.float32)
+    outs = []
+    for t in range(S):
+        y, cache = ssm.mlstm_decode(CFG_X, p, x[:, t : t + 1], cache)
+        outs.append(y)
+    y_rec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_rec), atol=2e-4, rtol=2e-3)
+
+
+def test_mlstm_prefill_state_equals_decode_state():
+    """Final (C, n, m) from the parallel form == state after stepwise decode."""
+    p = ssm.mlstm_init(KEY, CFG_X)
+    B, S = 2, 16
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, S, CFG_X.d_model))
+    _, s_par = ssm._mlstm_parallel(CFG_X, p, x)
+    cache = ssm.mlstm_cache_init(CFG_X, B, jnp.float32)
+    for t in range(S):
+        _, cache = ssm.mlstm_decode(CFG_X, p, x[:, t : t + 1], cache)
+    for k in ("C", "n", "m"):
+        np.testing.assert_allclose(
+            np.asarray(s_par[k]), np.asarray(cache[k]), atol=2e-4, rtol=2e-3
+        )
+
+
+def test_mamba_decode_matches_scan():
+    p = ssm.mamba_init(KEY, CFG_J)
+    B, S = 2, 32
+    x = jax.random.normal(jax.random.PRNGKey(4), (B, S, CFG_J.d_model))
+    y_full, final = ssm.mamba_apply(CFG_J, p, x)
+    cache = ssm.mamba_cache_init(CFG_J, B, jnp.float32)
+    outs = []
+    for t in range(S):
+        y, cache = ssm.mamba_decode(CFG_J, p, x[:, t : t + 1], cache)
+        outs.append(y)
+    y_rec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_rec), atol=3e-4, rtol=3e-3)
+    np.testing.assert_allclose(
+        np.asarray(final["h"]), np.asarray(cache["h"]), atol=3e-4, rtol=3e-3
+    )
+
+
+@given(chunk=st.sampled_from([4, 8, 16]), s=st.sampled_from([16, 32, 64]))
+@settings(max_examples=8)
+def test_mamba_chunked_scan_chunk_invariance(chunk, s):
+    """The chunked selective scan must be invariant to chunk size."""
+    rng = np.random.default_rng(0)
+    B, di, ds = 2, 8, 4
+    a = jnp.asarray(rng.uniform(0.7, 0.999, (B, s, di, ds)), jnp.float32)
+    bx = jnp.asarray(rng.normal(size=(B, s, di, ds)) * 0.1, jnp.float32)
+    C = jnp.asarray(rng.normal(size=(B, s, ds)), jnp.float32)
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    y1, h1 = ssm._selective_scan_chunked(a, bx, C, h0, chunk=s)  # single chunk
+    y2, h2 = ssm._selective_scan_chunked(a, bx, C, h0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-5, rtol=1e-4)
+
+
+def test_slstm_decode_matches_scan():
+    p = ssm.slstm_init(KEY, CFG_X)
+    B, S = 2, 24
+    x = jax.random.normal(jax.random.PRNGKey(5), (B, S, CFG_X.d_model))
+    y_full, final = ssm.slstm_apply(CFG_X, p, x)
+    cache = ssm.slstm_cache_init(CFG_X, B, jnp.float32)
+    outs = []
+    for t in range(S):
+        y, cache = ssm.slstm_decode(CFG_X, p, x[:, t : t + 1], cache)
+        outs.append(y)
+    y_rec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_rec), atol=2e-4, rtol=2e-3)
+    for k in ("c", "n", "h", "m"):
+        np.testing.assert_allclose(
+            np.asarray(final[k]), np.asarray(cache[k]), atol=2e-4, rtol=2e-3
+        )
+
+
+def test_gate_stability_extreme_inputs():
+    """Log-space gates: huge inputs must not overflow (500k-decode safety)."""
+    p = ssm.mlstm_init(KEY, CFG_X)
+    x = 50.0 * jax.random.normal(jax.random.PRNGKey(6), (1, 64, CFG_X.d_model))
+    y, s = ssm._mlstm_parallel(CFG_X, p, x)
+    assert np.isfinite(np.asarray(y)).all()
+    y2, s2 = ssm._mlstm_chunkwise(CFG_X, p, x, chunk=16)
+    assert np.isfinite(np.asarray(y2)).all()

@@ -1,0 +1,211 @@
+"""E8 — the paper's theoretical claims, tested numerically.
+
+* Property 1(i): sustained-low demand -> ToggleCCI == offline optimum exactly.
+* Property 1(ii): sustained-high demand -> competitive ratio -> 1 as T grows,
+  with the additive gap bounded by the paper's γ (transition-window) formula.
+* Theorem 1: no constant competitive ratio — exhibited against ToggleCCI and
+  every baseline on the adversarial instances.
+* Oracle DP: lower-bounds every policy on arbitrary traces (hypothesis).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+import hypothesis.extra.numpy as hnp
+
+from repro.core.adversary import (
+    competitive_ratio,
+    instance_for_ratio,
+    ratio_of_policy,
+)
+from repro.core.baselines import BASELINES, always_cci, always_vpn
+from repro.core.costmodel import evaluate_schedule, hourly_cost_series
+from repro.core.oracle import offline_optimal
+from repro.core.pricing import CostParams, breakeven_rate_gb_per_hour, flat_rate, make_scenario
+from repro.core.togglecci import run_togglecci
+
+P = make_scenario("gcp", "aws")
+
+
+# ---------------------------------------------------------------------------
+# Property 1(i) — low demand: exact optimality
+# ---------------------------------------------------------------------------
+
+
+def test_property1_low_demand_exact_optimality():
+    """Below the activation threshold, ToggleCCI == all-VPN == OPT."""
+    rate = 0.2 * breakeven_rate_gb_per_hour(P)
+    d = np.full(4000, rate)
+    res = run_togglecci(P, d)
+    assert (res.x == 0).all(), "must never leave VPN"
+    opt = offline_optimal(P, d)
+    assert res.total_cost == pytest.approx(opt.total_cost, rel=1e-12)
+
+
+@given(scale=st.floats(0.05, 0.6))
+@settings(max_examples=10)
+def test_property1_low_demand_sweep(scale):
+    rate = scale * breakeven_rate_gb_per_hour(P)
+    d = np.full(3000, rate)
+    res = run_togglecci(P, d)
+    opt = offline_optimal(P, d)
+    if (res.x == 0).all():  # TOGGLECCI never activated => exact optimality
+        assert res.total_cost <= opt.total_cost * (1 + 1e-12) + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Property 1(ii) — high demand: asymptotic optimality with gap <= gamma
+# ---------------------------------------------------------------------------
+
+
+def _gamma_upper_bound(params: CostParams, d: np.ndarray) -> float:
+    """The paper's γ: extra cost over the first h + D hours of VPN service
+    (vs OPT already on CCI), for aggregate single-pair demand."""
+    costs = hourly_cost_series(params, d)
+    w = params.h + params.D
+    return float(np.sum(costs.vpn[:w] - costs.cci[:w]))
+
+
+def test_property1_high_demand_gap_bounded_by_gamma():
+    rate = 20 * breakeven_rate_gb_per_hour(P)
+    d = np.full(6000, rate)
+    res = run_togglecci(P, d)
+    opt = offline_optimal(P, d)  # head-start allowed: OPT on CCI from t=0
+    assert opt.start_on
+    gap = res.total_cost - opt.total_cost
+    assert gap >= 0
+    assert gap <= _gamma_upper_bound(P, d) + 1e-6
+
+
+def test_property1_high_demand_ratio_to_one():
+    rate = 20 * breakeven_rate_gb_per_hour(P)
+    ratios = []
+    for T in (2000, 8000, 16000):
+        d = np.full(T, rate)
+        res = run_togglecci(P, d)
+        opt = offline_optimal(P, d)
+        ratios.append(res.total_cost / opt.total_cost)
+    assert ratios[0] > ratios[1] > ratios[2]
+    assert ratios[2] < 1.05, "asymptotically optimal"
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1 — no constant competitive ratio
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("alpha", [2.0, 10.0, 100.0])
+def test_theorem1_unbounded_ratio(alpha):
+    inst = instance_for_ratio(alpha)
+    policies = dict(BASELINES)
+    policies["togglecci"] = lambda p, d: run_togglecci(p, d).x
+    for name, pol in policies.items():
+        r_spike = ratio_of_policy(pol, inst.params, inst.demand_spike)
+        r_silent = ratio_of_policy(pol, inst.params, inst.demand_silent)
+        assert max(r_spike, r_silent) > alpha, (
+            f"{name}: adversary failed ({r_spike:.2f}, {r_silent:.2f}) vs {alpha}"
+        )
+
+
+def test_theorem1_branches():
+    """Branch A punishes VPN-leaning algs; branch B punishes CCI-leaning."""
+    inst = instance_for_ratio(5.0)
+    assert ratio_of_policy(always_vpn, inst.params, inst.demand_spike) > 5.0
+    assert ratio_of_policy(always_cci, inst.params, inst.demand_silent) == np.inf
+
+
+# ---------------------------------------------------------------------------
+# Oracle lower-bounds everything (the DP's defining property)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    d=hnp.arrays(np.float64, st.integers(20, 300), elements=st.floats(0, 1e4)),
+    seed=st.integers(0, 10_000),
+)
+@settings(max_examples=20)
+def test_oracle_lower_bounds_random_schedules(d, seed):
+    params = CostParams(1.0, 0.1, 0.02, 0.1, flat_rate(0.1), D=4, T_cci=6, h=8)
+    costs = hourly_cost_series(params, d)
+    opt = offline_optimal(params, costs=costs)
+    rng = np.random.default_rng(seed)
+    # Random *feasible* schedule: random request/release respecting D and T_cci.
+    x = np.zeros(len(d), dtype=np.int64)
+    t = 0
+    while t < len(d):
+        if rng.random() < 0.1:  # request
+            on_start = t + params.D
+            on_end = min(len(d), on_start + params.T_cci + rng.integers(0, 50))
+            if on_start < len(d):
+                x[on_start:on_end] = 1
+            t = on_end
+        else:
+            t += 1
+    cost = evaluate_schedule(params, d, x, costs=costs)
+    assert opt.total_cost <= cost + 1e-9
+
+
+@given(d=hnp.arrays(np.float64, st.integers(20, 250), elements=st.floats(0, 1e4)))
+@settings(max_examples=20)
+def test_oracle_lower_bounds_policies(d):
+    params = CostParams(1.0, 0.1, 0.02, 0.1, flat_rate(0.1), D=4, T_cci=6, h=8)
+    costs = hourly_cost_series(params, d)
+    opt = offline_optimal(params, costs=costs).total_cost
+    for name, pol in BASELINES.items():
+        c = evaluate_schedule(params, d, pol(params, d), costs=costs)
+        assert opt <= c + 1e-9, name
+    c = run_togglecci(params, d, costs=costs).total_cost
+    assert opt <= c + 1e-9
+
+
+def test_oracle_no_head_start_is_weakly_worse():
+    rate = 20 * breakeven_rate_gb_per_hour(P)
+    d = np.full(2000, rate)
+    with_hs = offline_optimal(P, d, allow_head_start=True).total_cost
+    without = offline_optimal(P, d, allow_head_start=False).total_cost
+    assert with_hs <= without + 1e-9
+
+
+def test_oracle_matches_brute_force_tiny():
+    """Exhaustive check on a tiny horizon: DP == brute force over all feasible
+    schedules."""
+    params = CostParams(2.0, 0.0, 0.01, 0.05, flat_rate(0.2), D=1, T_cci=2, h=2)
+    rng = np.random.default_rng(0)
+    d = rng.uniform(0, 50, size=8)
+    costs = hourly_cost_series(params, d)
+
+    # Enumerate schedules generated by all request/release decision sequences.
+    best = np.inf
+    T = len(d)
+
+    def rec(t, state, tstate, cost):
+        nonlocal best
+        if t == T:
+            best = min(best, cost)
+            return
+        vpn, cci = costs.vpn[t], costs.cci[t]
+        if state == 0:  # OFF: stay or request
+            rec(t + 1, 0, 0, cost + vpn)
+            # request: D=1 -> one WAITING hour then ON with T_cci commitment
+            rec(t + 1, 2, 1, cost + vpn)  # waiting hour consumed at t
+        elif state == 2:  # entering ON next hour (post-waiting marker)
+            rec(t + 1, 3, 1, cost + cci)  # first committed hour
+        elif state == 3:  # committed ON
+            if tstate + 1 < params.T_cci:
+                rec(t + 1, 3, tstate + 1, cost + cci)
+            else:
+                rec(t + 1, 4, 0, cost + cci)
+        else:  # free ON: stay or release
+            rec(t + 1, 4, 0, cost + cci)
+            rec(t + 1, 0, 0, cost + vpn)
+
+    rec(0, 0, 0, 0.0)
+    # Head-start branch: start already ON (free).
+    def rec_on(t, cost):
+        rec(t, 4, 0, cost)
+    rec_on(0, 0.0)
+
+    opt = offline_optimal(params, costs=costs)
+    assert opt.total_cost == pytest.approx(best)

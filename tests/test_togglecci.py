@@ -1,0 +1,164 @@
+"""Tests for the ToggleCCI FSM (paper §VI, Fig. 5)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+import hypothesis.extra.numpy as hnp
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.costmodel import hourly_cost_series
+from repro.core.pricing import CostParams, flat_rate, make_scenario
+from repro.core.togglecci import OFF, ON, WAITING, run_togglecci, run_togglecci_scan
+from repro.traffic.traces import bursty_trace, constant_trace
+
+P = make_scenario("gcp", "aws")
+
+
+def small_params(**kw):
+    kw.setdefault("D", 5)
+    kw.setdefault("T_cci", 12)
+    kw.setdefault("h", 12)
+    return CostParams(1.0, 0.1, 0.02, 0.1, flat_rate(0.1), **kw)
+
+
+def demand_strategy(max_t=500):
+    return hnp.arrays(np.float64, st.integers(10, max_t), elements=st.floats(0, 5e3))
+
+
+# ---------------------------------------------------------------------------
+# FSM invariants
+# ---------------------------------------------------------------------------
+
+
+@given(demand_strategy())
+def test_fsm_invariants(d):
+    params = small_params()
+    res = run_togglecci(params, d)
+    st_tr, x = res.state, res.x
+    # x == 1 exactly in ON.
+    np.testing.assert_array_equal(x == 1, st_tr == ON)
+    # WAITING runs are exactly D hours followed by ON.
+    t = 0
+    T = len(st_tr)
+    while t < T:
+        if st_tr[t] == WAITING:
+            run = 0
+            while t < T and st_tr[t] == WAITING:
+                run += 1
+                t += 1
+            if t < T:  # not truncated by horizon
+                assert run == params.D
+                assert st_tr[t] == ON
+        else:
+            t += 1
+    # ON runs last at least T_cci hours (unless truncated by the horizon).
+    t = 0
+    while t < T:
+        if st_tr[t] == ON:
+            run = 0
+            while t < T and st_tr[t] == ON:
+                run += 1
+                t += 1
+            if t < T:
+                assert run >= params.T_cci
+        else:
+            t += 1
+
+
+@given(demand_strategy())
+def test_initial_state_off(d):
+    res = run_togglecci(small_params(), d)
+    assert res.state[0] in (OFF, WAITING)  # hour 0 can request, never serve CCI
+    assert res.x[0] == 0
+
+
+def test_zero_demand_stays_off():
+    d = np.zeros(1000)
+    res = run_togglecci(small_params(), d)
+    assert (res.state == OFF).all()
+    assert res.total_cost == pytest.approx(1000 * small_params().L_vpn)
+
+
+def test_sustained_high_demand_activates():
+    params = small_params()
+    d = np.full(500, 1e4)  # VPN at 0.1 $/GB vs CCI at 0.02 -> CCI wins big
+    res = run_togglecci(params, d)
+    assert len(res.requests) == 1
+    first_on = np.argmax(res.state == ON)
+    assert res.state[first_on - 1] == WAITING
+    assert (res.state[first_on:] == ON).all(), "high demand: stays ON forever"
+
+
+def test_hysteresis_prevents_oscillation():
+    """Demand hovering at breakeven: two thresholds (0.9/1.1) must produce
+    far fewer mode switches than a single threshold (1.0/1.0)."""
+    from repro.core.pricing import breakeven_rate_gb_per_hour
+
+    rate = breakeven_rate_gb_per_hour(P)
+    rng = np.random.default_rng(7)
+    d = rate * rng.normal(1.0, 0.15, size=5000).clip(0, None)
+    hyst = run_togglecci(P, d)
+    import dataclasses
+
+    single = dataclasses.replace(P, theta1=1.0, theta2=1.0)
+    nohyst = run_togglecci(single, d)
+    switches = lambda r: len(r.requests) + len(r.releases)
+    assert switches(hyst) <= switches(nohyst)
+
+
+def test_renew_in_chunks_releases_only_at_multiples():
+    params = small_params()
+    rng = np.random.default_rng(3)
+    d = np.where(rng.random(800) < 0.5, 1e4, 0.0)
+    res = run_togglecci(params, d, renew_in_chunks=True)
+    # Every ON run must be an exact multiple of T_cci (unless horizon-cut).
+    t, T = 0, len(res.state)
+    while t < T:
+        if res.state[t] == ON:
+            run = 0
+            while t < T and res.state[t] == ON:
+                run += 1
+                t += 1
+            if t < T:
+                assert run % params.T_cci == 0
+        else:
+            t += 1
+
+
+# ---------------------------------------------------------------------------
+# scan implementation equivalence
+# ---------------------------------------------------------------------------
+
+
+@given(demand_strategy(max_t=400))
+@settings(max_examples=15)
+def test_scan_matches_python(d):
+    params = small_params()
+    costs = hourly_cost_series(params, d)
+    ref = run_togglecci(params, d, costs=costs)
+    out = run_togglecci_scan(
+        params, jnp.asarray(costs.vpn, jnp.float32), jnp.asarray(costs.cci, jnp.float32)
+    )
+    np.testing.assert_array_equal(np.asarray(out["x"]), ref.x)
+    np.testing.assert_array_equal(np.asarray(out["state"]), ref.state)
+    assert float(out["total_cost"]) == pytest.approx(ref.total_cost, rel=1e-4)
+
+
+def test_scan_matches_python_paper_params_bursty():
+    d = bursty_trace(seed=11).sum(axis=1)
+    costs = hourly_cost_series(P, d)
+    ref = run_togglecci(P, d, costs=costs)
+    out = run_togglecci_scan(P, jnp.asarray(costs.vpn), jnp.asarray(costs.cci))
+    np.testing.assert_array_equal(np.asarray(out["x"]), ref.x)
+
+
+def test_scan_vmaps_over_scenarios():
+    ds = np.stack([bursty_trace(seed=s).sum(axis=1) for s in range(4)])
+    vpn = np.stack([hourly_cost_series(P, d).vpn for d in ds])
+    cci = np.stack([hourly_cost_series(P, d).cci for d in ds])
+    fn = jax.vmap(lambda v, c: run_togglecci_scan(P, v, c)["total_cost"])
+    totals = np.asarray(fn(jnp.asarray(vpn), jnp.asarray(cci)))
+    refs = np.array([run_togglecci(P, d).total_cost for d in ds])
+    np.testing.assert_allclose(totals, refs, rtol=1e-4)

@@ -1,0 +1,169 @@
+"""Tests for the traffic substrate: generators + the §IV link simulator."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.traffic import linksim as L
+from repro.traffic.mirage import mirage_trace
+from repro.traffic.puffer import puffer_trace
+from repro.traffic.traces import bursty_trace, constant_trace
+
+# ---------------------------------------------------------------------------
+# Generators
+# ---------------------------------------------------------------------------
+
+
+def test_constant_trace():
+    d = constant_trace(100.0, horizon=500, n_pairs=4)
+    assert d.shape == (500, 4)
+    np.testing.assert_allclose(d.sum(axis=1), 100.0)
+
+
+@given(seed=st.integers(0, 100))
+@settings(max_examples=10)
+def test_bursty_trace_properties(seed):
+    d = bursty_trace(horizon=4000, seed=seed)
+    assert d.shape == (4000, 1)
+    assert (d >= 0).all()
+    # Roughly one burst/month of ~1 week at 400 GB/h -> mean in [10, 300].
+    assert 0.0 <= d.mean() < 400.0
+
+
+def test_bursty_trace_deterministic():
+    np.testing.assert_array_equal(bursty_trace(seed=5), bursty_trace(seed=5))
+
+
+def test_mirage_trace_shape_and_scale():
+    d = mirage_trace(2000, horizon_days=14, n_pairs=3, seed=0)
+    assert d.shape == (14 * 24, 3)
+    assert (d >= 0).all()
+    per_user_day = d.sum() / 14 / 2000
+    assert 0.05 < per_user_day < 3.0, f"mobile-scale GB/user/day, got {per_user_day}"
+
+
+def test_mirage_diurnal_pattern():
+    d = mirage_trace(5000, horizon_days=30, seed=1).sum(axis=1)
+    by_hour = d.reshape(30, 24).mean(axis=0)
+    assert by_hour[19] > 3 * by_hour[3], "evening >> pre-dawn"
+
+
+def test_mirage_scales_with_users():
+    d1 = mirage_trace(1000, horizon_days=7, seed=2).sum()
+    d2 = mirage_trace(10000, horizon_days=7, seed=2).sum()
+    assert 7 < d2 / d1 < 13
+
+
+def test_puffer_stable_and_cyclic():
+    d = puffer_trace(horizon_days=28, seed=0)
+    assert d.shape == (28 * 24, 7)
+    agg = d.sum(axis=1)
+    by_hour = agg.reshape(28, 24).mean(axis=0)
+    assert by_hour.argmax() in (18, 19, 20, 21), "evening peak"
+    # Stability: puffer's day-to-day variation is mild vs mirage burstiness.
+    daily = agg.reshape(28, 24).sum(axis=1)
+    assert daily.std() / daily.mean() < 0.3
+
+
+# ---------------------------------------------------------------------------
+# Link simulator — each §IV finding (F1-F8 in linksim docstring)
+# ---------------------------------------------------------------------------
+
+
+def test_f1_cci_hard_cap():
+    """CCI never exceeds nominal; saturation = nominal - ~5% overhead."""
+    for seed in range(5):
+        r = L.measure_throughput("cci", "intra_region", utilization=1.0, repeats=5, seed=seed)
+        assert r["max_gbps"] <= L.CCI_NOMINAL_GBPS
+        assert 9.0 <= r["mean_gbps"] <= 9.6
+
+
+def test_f2_nic_elastic_short_bursts():
+    """Short bursts on a small NIC reach ~2x nominal (the paper's 4.16 on 2)."""
+    path = L.PathConfig("cci", nic_nominal_gbps=2.0)
+    flow = L.Flow(n_connections=10, per_conn_target_gbps=0.5, duration_s=60)
+    m, series = L.simulate(path, [flow], seed=0, return_timeseries=True)
+    assert series[:30].mean() > 1.3 * 2.0, "burst exceeds nominal NIC"
+    # After warm-up the NIC converges back to nominal.
+    path_long = L.PathConfig("cci", nic_nominal_gbps=2.0)
+    flow_long = L.Flow(10, 0.5, 600)
+    _, s2 = L.simulate(path_long, [flow_long], seed=0, return_timeseries=True)
+    assert s2[320:].mean() <= 2.0 * 1.05
+
+
+def test_f3_vlan_elastic_upward_only():
+    path = L.PathConfig("cci", vlan_nominal_gbps=(5.0,))
+    flow = L.Flow(10, 0.9, 600)
+    _, s = L.simulate(path, [flow], seed=1, return_timeseries=True)
+    assert s[:60].mean() > 5.0, "VLAN burst above nominal"
+    assert s[320:].mean() >= 5.0 * 0.93, "never below nominal after warmup"
+
+
+def test_f4_overbooked_vlan_fair_share():
+    """Two 10G VLANs on a 10G CCI -> ~5 Gbps each (paper §IV-A)."""
+    path = L.PathConfig("cci", vlan_nominal_gbps=(10.0, 10.0))
+    flows = [L.Flow(10, 1.0, 400, 0), L.Flow(10, 1.0, 400, 1)]
+    m = L.simulate(path, flows, seed=2)
+    assert abs(m[0] - m[1]) < 0.5
+    assert m.sum() <= L.CCI_NOMINAL_GBPS
+    assert 4.2 <= m[0] <= 5.3
+
+
+def test_f4_fair_share_within_capacity_no_throttle():
+    """Overbooked VLAN but total under CCI cap: connections get fair shares."""
+    path = L.PathConfig("cci", vlan_nominal_gbps=(5.0,))
+    flows = [L.Flow(5, 0.4, 400, 0), L.Flow(5, 0.4, 400, 0)]
+    m = L.simulate(path, flows, seed=3)
+    assert abs(m[0] - m[1]) < 0.3
+
+
+def test_f5_vpn_autoscale_dynamics():
+    short = L.measure_throughput("vpn", utilization=1.0, duration_s=240, repeats=10)
+    long_ = L.measure_throughput("vpn", utilization=1.0, duration_s=1200, repeats=10)
+    assert short["mean_gbps"] < 0.9, "pre-autoscale: low"
+    assert long_["mean_gbps"] > 1.0, "post-autoscale approaches 1.25"
+    assert long_["max_gbps"] < 1.25 * 1.7
+
+
+def test_f5_short_flows_exceed_cap():
+    path = L.PathConfig("vpn")
+    flow = L.Flow(10, 0.2, 25)  # 2 Gbps offered for 25 s
+    m = L.simulate(path, [flow], seed=4)
+    assert m[0] > L.VPN_TUNNEL_CAP_GBPS, "throttling hasn't kicked in yet"
+
+
+def test_f6_internet_egress_cap():
+    r = L.measure_throughput("internet_prem", utilization=1.0, n_connections=20, repeats=5)
+    assert r["mean_gbps"] <= L.INTERNET_EGRESS_CAP_GBPS * 1.05
+    # The same NIC fills a 10G CCI -> the cap is internet-specific.
+    c = L.measure_throughput("cci", utilization=1.0, n_connections=20, repeats=5)
+    assert c["mean_gbps"] > r["mean_gbps"]
+
+
+def test_f7_bdp_intercontinental_drop():
+    near = L.measure_throughput("cci", "intra_region", utilization=1.0, repeats=5)
+    far = L.measure_throughput("cci", "inter_continent", utilization=1.0, repeats=5)
+    assert far["mean_gbps"] < 0.5 * near["mean_gbps"]
+    # Quantitative BDP check: 10 conns * window/RTT.
+    expect = L._bdp_cap_gbps(L.RTT_MS["inter_continent"], 10)
+    assert far["mean_gbps"] == pytest.approx(expect, rel=0.25)
+
+
+def test_f8_standard_tier_can_beat_premium_intra_continent():
+    wins = 0
+    for seed in range(30):
+        s = L.measure_throughput("internet_std", "intra_continent", utilization=0.7,
+                                 repeats=1, seed=seed)
+        p = L.measure_throughput("internet_prem", "intra_continent", utilization=0.7,
+                                 repeats=1, seed=seed + 999)
+        wins += s["mean_gbps"] > p["mean_gbps"]
+    assert 1 <= wins <= 29, "standard occasionally (not always) beats premium"
+
+
+def test_max_min_fair_properties():
+    a = L.max_min_fair([1.0, 2.0, 10.0], 6.0)
+    np.testing.assert_allclose(a, [1.0, 2.0, 3.0])
+    a = L.max_min_fair([5.0, 5.0], 6.0)
+    np.testing.assert_allclose(a, [3.0, 3.0])
+    a = L.max_min_fair([1.0, 1.0], 100.0)
+    np.testing.assert_allclose(a, [1.0, 1.0])  # never exceeds demand

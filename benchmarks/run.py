@@ -14,6 +14,7 @@ from . import (
     bench_azure_intercont,
     bench_bursty,
     bench_constant,
+    bench_fleet,
     bench_measurements,
     bench_mirage,
     bench_planner,
@@ -34,6 +35,10 @@ BENCHES = [
     ("bursty_fig12", lambda: bench_bursty.run(horizon=2000 if FAST else 8760)),
     ("sensitivity_fig13_14", lambda: bench_sensitivity.run(horizon=2000 if FAST else 8760)),
     ("planner_e12", lambda: bench_planner.run(hours=2000 if FAST else 8760)),
+    ("fleet_portfolio", lambda: bench_fleet.run(
+        16 if FAST else 128, 2000 if FAST else 8760,
+        repeats=2 if FAST else 5, verify_links=None if FAST else 16,
+    )),
     ("roofline_e10", lambda: bench_roofline.run()),
 ]
 

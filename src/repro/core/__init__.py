@@ -23,7 +23,12 @@ from .costmodel import (  # noqa: F401
     hourly_cost_series,
     hourly_cost_series_jnp,
 )
-from .togglecci import ToggleResult, run_togglecci, run_togglecci_scan  # noqa: F401
+from .togglecci import (  # noqa: F401
+    ToggleParams,
+    ToggleResult,
+    run_togglecci,
+    run_togglecci_scan,
+)
 from .baselines import BASELINES, evaluate_all  # noqa: F401
 from .oracle import best_static, offline_optimal  # noqa: F401
 from .adversary import competitive_ratio, instance_for_ratio  # noqa: F401

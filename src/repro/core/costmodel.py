@@ -159,6 +159,53 @@ def tiered_marginal_cost_jnp(
     return jnp.sum(seg * rates, axis=-1)
 
 
+def tiered_marginal_cost_tables(
+    start_gb: jax.Array,   # (..., T)
+    added_gb: jax.Array,   # (..., T)
+    bounds: jax.Array,     # (..., K) — inf already mapped to a large finite cap
+    rates: jax.Array,      # (..., K)
+) -> jax.Array:
+    """Piecewise-linear marginal cost with the tier tables as *array operands*.
+
+    Unlike :func:`tiered_marginal_cost_jnp` (which closes over one static
+    :class:`TieredRate`), this broadcasts ``(..., T)`` volumes against
+    ``(..., K)`` tables — the batched path the fleet engine uses to price N
+    heterogeneous links in one XLA op. Pad ragged tables with
+    ``(bound=1e30, rate=0)`` rows: duplicate bounds make zero-width
+    segments, so padding never contributes cost.
+    """
+    acc = jnp.result_type(start_gb.dtype, added_gb.dtype, jnp.result_type(float))
+    bounds = bounds.astype(acc)
+    rates = rates.astype(acc)
+    prev = jnp.concatenate(
+        [jnp.zeros(bounds.shape[:-1] + (1,), acc), bounds[..., :-1]], axis=-1
+    )
+    lo = start_gb.astype(acc)[..., None]                 # (..., T, 1)
+    hi = lo + added_gb.astype(acc)[..., None]
+    seg = jnp.clip(
+        jnp.minimum(hi, bounds[..., None, :]) - jnp.maximum(lo, prev[..., None, :]),
+        0.0,
+    )
+    return jnp.sum(seg * rates[..., None, :], axis=-1)
+
+
+def monthly_cumsum(demand: jax.Array, hours_per_month: int) -> jax.Array:
+    """Exclusive within-month cumulative volume along the LAST axis.
+
+    ``demand``: (..., T). Returns the all-VPN-counterfactual tier position at
+    the start of each hour (the tier-state convention above), vectorized over
+    any leading batch axes.
+    """
+    d = demand
+    T = d.shape[-1]
+    t_idx = jnp.arange(T)
+    month_start = (t_idx // hours_per_month) * hours_per_month
+    full = jnp.concatenate(
+        [jnp.zeros(d.shape[:-1] + (1,), d.dtype), jnp.cumsum(d, axis=-1)], axis=-1
+    )
+    return full[..., :-1] - full[..., month_start]
+
+
 def hourly_cost_series_jnp(params: CostParams, demand: jax.Array):
     """jnp version of :func:`hourly_cost_series`. demand: (T, P) -> dict of (T,)."""
     d = demand.astype(jnp.float32)

@@ -29,7 +29,7 @@ Two equivalent implementations:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import numpy as np
 
@@ -117,8 +117,65 @@ def run_togglecci(
 # ---------------------------------------------------------------------------
 
 
+class ToggleParams(NamedTuple):
+    """ToggleCCI's decision parameters as *traceable array operands*.
+
+    Unlike :class:`CostParams` (whose fields are Python scalars baked into
+    the trace), every field here is a jax scalar — so one compiled scan can
+    be ``vmap``-ped over a fleet of heterogeneous links (see ``repro.fleet``)
+    with per-link thresholds, windows, delays and commitments.
+    """
+
+    theta1: jax.Array  # OFF->WAITING threshold
+    theta2: jax.Array  # ON->OFF threshold
+    h: jax.Array       # sliding window, hours (int32)
+    D: jax.Array       # provisioning delay, hours (int32)
+    T_cci: jax.Array   # minimum commitment, hours (int32)
+
+    @classmethod
+    def from_cost_params(cls, p: CostParams) -> "ToggleParams":
+        f = jnp.result_type(float)
+        return cls(
+            theta1=jnp.asarray(p.theta1, f),
+            theta2=jnp.asarray(p.theta2, f),
+            h=jnp.asarray(p.h, jnp.int32),
+            D=jnp.asarray(p.D, jnp.int32),
+            T_cci=jnp.asarray(p.T_cci, jnp.int32),
+        )
+
+
+def _window_sums(hourly: jax.Array, h) -> jax.Array:
+    """Sliding-window sums ``r[t] = sum(hourly[max(0, t-h):t])``.
+
+    Computed from prefix sums OUTSIDE the scan (the FSM scan itself is pure
+    integer arithmetic). Precision: year-long float32 cumsums reach ~1e6-1e7
+    while hourly costs sit at ~1e0-1e3, so float32 prefix differences can
+    flip θ₁/θ₂ comparisons near the threshold. Concrete inputs therefore
+    take a float64 numpy path unconditionally; traced inputs accumulate in
+    ``jnp.result_type(float)`` — float64 whenever the caller runs under
+    x64 (the fleet engine does), float32 otherwise.
+    """
+    if not isinstance(hourly, jax.core.Tracer) and not isinstance(
+        h, jax.core.Tracer
+    ):
+        v = np.asarray(hourly, dtype=np.float64)
+        T = v.shape[0]
+        pref = np.concatenate([[0.0], np.cumsum(v)])
+        t_idx = np.arange(T)
+        lo = np.maximum(0, t_idx - int(h))
+        r = pref[t_idx] - pref[lo]
+        return jnp.asarray(r.astype(np.result_type(jnp.result_type(float))))
+    acc = jnp.result_type(float)
+    v = hourly.astype(acc)
+    T = v.shape[0]
+    pref = jnp.concatenate([jnp.zeros(1, acc), jnp.cumsum(v)])
+    t_idx = jnp.arange(T)
+    lo = jnp.maximum(0, t_idx - h)
+    return pref[t_idx] - pref[lo]
+
+
 def run_togglecci_scan(
-    params: CostParams,
+    params,
     vpn_hourly: jax.Array,
     cci_hourly: jax.Array,
     *,
@@ -127,27 +184,30 @@ def run_togglecci_scan(
     """``lax.scan`` ToggleCCI over precomputed per-hour mode costs.
 
     Args:
+      params: :class:`CostParams` (static Python scalars) or
+        :class:`ToggleParams` (traceable array operands — required when
+        vmapping over heterogeneous links).
       vpn_hourly, cci_hourly: (T,) per-hour counterfactual costs.
     Returns:
-      dict with ``x`` (T,), ``state`` (T,), ``total_cost`` scalar.
+      dict with ``x`` (T,), ``state`` (T,), ``r_vpn``/``r_cci`` window
+      sums, ``total_cost`` scalar.
 
-    The sliding window is maintained as running sums plus the raw cost series
-    (indexed with ``lax.dynamic_slice``-free arithmetic: we carry prefix sums).
-    vmap over leading scenario axes by vmapping this function.
+    vmap over leading scenario/link axes by vmapping this function (map the
+    ``ToggleParams`` fields too for heterogeneous fleets).
     """
-    h, D, T_cci = params.h, params.D, params.T_cci
-    th1, th2 = params.theta1, params.theta2
-    vpn = vpn_hourly.astype(jnp.float32)
-    cci = cci_hourly.astype(jnp.float32)
-    T = vpn.shape[0]
-    vpn_pref = jnp.concatenate([jnp.zeros(1, jnp.float32), jnp.cumsum(vpn)])
-    cci_pref = jnp.concatenate([jnp.zeros(1, jnp.float32), jnp.cumsum(cci)])
+    tp = (
+        params
+        if isinstance(params, ToggleParams)
+        else ToggleParams.from_cost_params(params)
+    )
+    th1, th2, D, T_cci = tp.theta1, tp.theta2, tp.D, tp.T_cci
+    r_vpn_tr = _window_sums(vpn_hourly, tp.h)
+    r_cci_tr = _window_sums(cci_hourly, tp.h)
+    T = r_vpn_tr.shape[0]
 
-    def step(carry, t):
+    def step(carry, rs):
         state, t_state = carry
-        lo = jnp.maximum(0, t - h)
-        r_vpn = vpn_pref[t] - vpn_pref[lo]
-        r_cci = cci_pref[t] - cci_pref[lo]
+        r_vpn, r_cci = rs
 
         # Cascade identical to the python reference (start-of-hour transitions).
         go_wait = (state == OFF) & (r_cci < th1 * r_vpn)
@@ -166,12 +226,15 @@ def run_togglecci_scan(
         ts3 = jnp.where(go_off, 0, ts2)
 
         x_t = jnp.where(s3 == ON, 1, 0)
-        return (s3, ts3 + 1), (x_t, s3, r_vpn, r_cci)
+        return (s3, ts3 + 1), (x_t, s3)
 
-    (_, _), (x, state_tr, r_vpn_tr, r_cci_tr) = jax.lax.scan(
-        step, (jnp.int32(OFF), jnp.int32(0)), jnp.arange(T)
+    (_, _), (x, state_tr) = jax.lax.scan(
+        step, (jnp.int32(OFF), jnp.int32(0)), (r_vpn_tr, r_cci_tr)
     )
-    total = jnp.sum(jnp.where(x == 1, cci, vpn))
+    acc = r_vpn_tr.dtype
+    total = jnp.sum(
+        jnp.where(x == 1, cci_hourly.astype(acc), vpn_hourly.astype(acc))
+    )
     return {
         "x": x,
         "state": state_tr,

@@ -1,0 +1,15 @@
+"""Distribution layer: sharding rules, activation constraints, collectives,
+and compiled-HLO telemetry.
+
+Modules
+  sharding      MeshRules + pytree -> NamedSharding assignment (params, cache,
+                batches, logits) with per-dim divisibility fallback
+  act_shard     logical-axis activation constraints (``constrain``) bound to an
+                ambient mesh context (``activation_sharding``)
+  collectives   gradient sync modes: direct / hierarchical / int8-compressed
+                (error feedback) — the planner's endogenous-demand actuator
+  telemetry     parse collectives out of compiled HLO text (wire-byte model)
+  hlo_analysis  FLOP walk over compiled HLO incl. while-loop trip counts
+"""
+from . import act_shard, collectives, hlo_analysis, sharding, telemetry  # noqa: F401
+from .sharding import MeshRules, ZERO3_RULES  # noqa: F401

@@ -1,0 +1,103 @@
+"""Logical-axis activation sharding constraints.
+
+Model code calls ``constrain(x, "btd")`` at layer boundaries; the mapping from
+logical keys to mesh axes is bound by the ``activation_sharding(mesh, rules)``
+context (the dry-run / launch path opens it around lowering). Outside the
+context — unit tests, single-device smoke runs — every constraint is an exact
+no-op, so the model code never branches on distribution.
+
+Keys (positional, batch-major):
+  btd      (B, T, d)    token activations
+  bmd      (B, M, d)    encoder-memory activations
+  btv      (B, T, V)    logits — V over tensor axes when the vocab divides
+  bshd_tp  (B, S, H, d) per-head q/k/v — heads over tensor axes
+  feat_tp  (..., f)     ffn hidden — feature dim over tensor axes
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .sharding import MeshRules, _fit, param_shardings
+
+_CTX = threading.local()
+
+
+@contextmanager
+def activation_sharding(mesh, rules: MeshRules = MeshRules()):
+    """Bind (mesh, rules) for every ``constrain`` call in the dynamic extent."""
+    prev = getattr(_CTX, "bound", None)
+    _CTX.bound = (mesh, rules)
+    try:
+        yield
+    finally:
+        _CTX.bound = prev
+
+
+def _current():
+    return getattr(_CTX, "bound", None)
+
+
+def _spec_for(key: str, shape, mesh, rules: MeshRules) -> P:
+    used: set = set()
+    nd = len(shape)
+    if key in ("btd", "bmd"):
+        return P(_fit(rules.batch, shape[0], mesh, used), *([None] * (nd - 1)))
+    if key == "btv":
+        b = _fit(rules.batch, shape[0], mesh, used)
+        v = _fit(rules.tensor, shape[-1], mesh, used)
+        return P(b, *([None] * (nd - 2)), v)
+    if key == "bshd_tp":
+        b = _fit(rules.batch, shape[0], mesh, used)
+        h = _fit(rules.tensor, shape[2], mesh, used)
+        return P(b, None, h, None)
+    if key == "feat_tp":
+        f = _fit(rules.tensor, shape[-1], mesh, used)
+        return P(*([None] * (nd - 1)), f)
+    raise KeyError(f"unknown activation-sharding key: {key!r}")
+
+
+def constrain(x, key: str):
+    """Pin ``x`` to the key's sharding under the ambient context (else no-op)."""
+    ctx = _current()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = _spec_for(key, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_vjp(x, key: str):
+    """Like :func:`constrain`, but ALSO pins the cotangent on the backward
+    pass (GSPMD otherwise materializes unsharded f32 ffn-hidden cotangents)."""
+    ctx = _current()
+    if ctx is None:
+        return x
+
+    @jax.custom_vjp
+    def inner(v):
+        return constrain(v, key)
+
+    def fwd(v):
+        return constrain(v, key), None
+
+    def bwd(_, g):
+        return (constrain(g, key),)
+
+    inner.defvjp(fwd, bwd)
+    return inner(x)
+
+
+def constrain_like_params(grads):
+    """Pin a gradient pytree to the parameters' shardings so the gradient
+    reduction lowers to a reduce-scatter onto the owning shards. Identity
+    outside an ``activation_sharding`` context."""
+    ctx = _current()
+    if ctx is None:
+        return grads
+    mesh, rules = ctx
+    shardings = param_shardings(mesh, grads, rules)
+    return jax.tree.map(jax.lax.with_sharding_constraint, grads, shardings)

@@ -1,0 +1,99 @@
+"""Gradient synchronization modes over the (pod, data, model) mesh.
+
+``sync_grads`` is the cross-pod actuator the InterconnectPlanner drives:
+
+* ``direct``        one flat mean over every data-parallel axis;
+* ``hierarchical``  mean within each pod (cheap ICI), then across pods — the
+                    full-precision mode used when the leased DCI is ON;
+* ``compressed``    intra-pod mean in full precision, then int8 per-row
+                    quantization with error feedback for the pod hop only —
+                    ~4x fewer wire (billed) bytes on the pay-per-GB path.
+
+All modes run under ``shard_map`` so the collectives are explicit in compiled
+HLO (the telemetry tests meter them there).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+INT8_MAX = 127.0
+
+
+def _dp_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def init_error_state(grads, mesh):
+    """Zero error-feedback residuals (one per gradient leaf)."""
+    del mesh
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def _quantize(v):
+    """Per-row symmetric int8: scale over the last dim."""
+    scale = jnp.max(jnp.abs(v), axis=-1, keepdims=True) / INT8_MAX
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.round(v / scale).astype(jnp.int8)
+    return q, scale
+
+
+def _sync_leaf(g, err, *, mode: str, dp, has_pod: bool):
+    intra = tuple(a for a in dp if a != "pod")
+    if mode == "direct":
+        return jax.lax.pmean(g, dp) if dp else g, None
+    if mode == "hierarchical":
+        out = jax.lax.pmean(g, intra) if intra else g
+        if has_pod:
+            out = jax.lax.pmean(out, "pod")
+        return out, None
+    # compressed: full precision inside the pod, int8 + error feedback across.
+    out = jax.lax.pmean(g, intra) if intra else g
+    if not has_pod:
+        return out, jnp.zeros_like(out) if err is not None else None
+    u = out + (err if err is not None else 0.0)
+    q, scale = _quantize(u)
+    deq = q.astype(jnp.float32) * scale
+    new_err = u - deq
+    qs = jax.lax.all_gather(q, "pod")          # int8 on the wire
+    ss = jax.lax.all_gather(scale, "pod")      # tiny f32 sidecar
+    avg = jnp.mean(qs.astype(jnp.float32) * ss, axis=0)
+    return avg.astype(g.dtype), new_err
+
+
+def sync_grads(grads, mesh, *, mode: str = "direct", err_state=None):
+    """Average a gradient pytree over the mesh's data-parallel axes.
+
+    Returns ``(synced_grads, err_state)``; ``err_state`` is the updated
+    error-feedback residual pytree for ``mode='compressed'`` (else ``None``).
+    Inputs may be host arrays (replicated on entry).
+    """
+    assert mode in ("direct", "hierarchical", "compressed"), mode
+    dp = _dp_axes(mesh)
+    has_pod = "pod" in mesh.shape
+    if err_state is None and mode == "compressed":
+        err_state = init_error_state(grads, mesh)
+    use_err = mode == "compressed"
+
+    leaf = functools.partial(_sync_leaf, mode=mode, dp=dp, has_pod=has_pod)
+
+    def fn(g, e):
+        pairs = jax.tree.map(leaf, g, e)
+        outs = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda p: isinstance(p, tuple))
+        errs = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda p: isinstance(p, tuple))
+        return outs, errs
+
+    err_in = err_state if use_err else jax.tree.map(lambda g: jnp.zeros((), jnp.float32), grads)
+    mapped = shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(P(), P()),
+        out_specs=(P(), P()),
+        check_rep=False,
+    )
+    outs, errs = mapped(grads, err_in)
+    return outs, (errs if use_err else None)

@@ -1,0 +1,150 @@
+"""Pytree -> NamedSharding assignment with per-dim divisibility fallback.
+
+The model keeps parameters stacked per segment pattern (leading ``rep`` dim,
+see ``repro.models.lm``), so rules are expressed positionally from the RIGHT
+of each leaf plus a few name cues (norms, caches). Every produced sharding is
+*valid by construction*: an axis is only assigned to a dim when the axis
+product divides the dim size, axes never repeat within one spec, and axes
+absent from the mesh are dropped — so the same rules serve every mesh shape
+(host test meshes through 512-chip production meshes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    """Logical-axis -> mesh-axes mapping.
+
+    ``batch``  — data-parallel axes for the batch dim of activations/tokens.
+    ``tensor`` — tensor-parallel axes (last dim of weights, head dims).
+    ``embed``  — FSDP/ZeRO axes for the non-tensor weight dim; ``()`` means
+                 "replicate weights over dp" (the serving rules).
+    ``expert`` — axes for the expert dim (dim -3) of stacked MoE weights.
+    ``seq``    — sequence-parallel axes (long-context caches); usually passed
+                 per call site via ``seq_axes``.
+    """
+
+    batch: Tuple[str, ...] = ("pod", "data")
+    tensor: Tuple[str, ...] = ("model",)
+    embed: Tuple[str, ...] = ("pod", "data")
+    expert: Tuple[str, ...] = ("pod", "data")
+    seq: Tuple[str, ...] = ()
+
+
+# ZeRO-3 / full-DP: the batch (and weight shards) spread over every axis.
+ZERO3_RULES = MeshRules(
+    batch=("pod", "data", "model"),
+    embed=("pod", "data", "model"),
+)
+
+_NORM_CUES = ("norm", "scale_rms")
+
+
+def _fit(axes, dim: int, mesh, used: set):
+    """Largest usable suffix of ``axes`` whose size product divides ``dim``.
+
+    Axes not present in the mesh or already used in this spec are dropped
+    first; then axes are peeled from the LEFT until the product divides (so
+    ("pod", "data") degrades to ("data",) before giving up). Returns None,
+    a bare axis name, or a tuple — matching PartitionSpec conventions.
+    """
+    cand = [a for a in axes if a in mesh.shape and a not in used]
+    while cand:
+        prod = int(np.prod([mesh.shape[a] for a in cand]))
+        if prod > 1 and dim % prod == 0:
+            used.update(cand)
+            return cand[0] if len(cand) == 1 else tuple(cand)
+        cand = cand[1:]
+    return None
+
+
+def _leaf_name(path) -> str:
+    for k in reversed(path):
+        key = getattr(k, "key", None)
+        if isinstance(key, str):
+            return key
+    return ""
+
+
+def _param_spec(name: str, shape, mesh, rules: MeshRules) -> P:
+    nd = len(shape)
+    if nd <= 1 or any(c in name for c in _NORM_CUES):
+        return P()
+    used: set = set()
+    spec = [None] * nd
+    spec[nd - 1] = _fit(rules.tensor, shape[-1], mesh, used)
+    if nd >= 4:
+        # Stacked MoE weights (rep, E, d, f): expert dim is -3; the remaining
+        # dims stay unsharded (expert + tensor already spread the big axes).
+        spec[nd - 3] = _fit(rules.expert, shape[-3], mesh, used)
+    else:
+        # (V, d) / (d, f) / stacked (rep, d, f): FSDP on the input dim.
+        spec[nd - 2] = _fit(rules.embed, shape[-2], mesh, used)
+    return P(*spec)
+
+
+def param_shardings(mesh, abstract_params, rules: MeshRules = MeshRules()):
+    """NamedSharding pytree for a (possibly abstract) parameter pytree."""
+
+    def assign(path, leaf):
+        return NamedSharding(
+            mesh, _param_spec(_leaf_name(path), leaf.shape, mesh, rules)
+        )
+
+    return jax.tree_util.tree_map_with_path(assign, abstract_params)
+
+
+def _cache_spec(name: str, leaf, mesh, rules: MeshRules, seq_axes) -> P:
+    shape, nd = leaf.shape, len(leaf.shape)
+    if nd == 0 or np.issubdtype(leaf.dtype, np.integer):
+        return P()  # index counter / slot-position bookkeeping: replicate
+    if name == "memory":  # (B, M, d) encoder memory: batch-major
+        spec = [None] * nd
+        used: set = set()
+        spec[0] = _fit(rules.batch, shape[0], mesh, used)
+        return P(*spec)
+    # Stacked per-layer entries (rep, B, ...): batch at dim 1; KV caches
+    # (rep, B, S, H, hd) additionally spread sequence and kv-head dims.
+    used = set()
+    spec = [None] * nd
+    if nd >= 2:
+        spec[1] = _fit(rules.batch, shape[1], mesh, used)
+    if nd == 5:  # (rep, B, S, H_kv, hd): kv heads on tensor axes
+        spec[3] = _fit(rules.tensor, shape[3], mesh, used)
+    elif nd >= 3:  # (rep, B, S?, feat): feature dim on tensor axes
+        spec[nd - 1] = _fit(rules.tensor, shape[-1], mesh, used)
+    if nd >= 4:
+        spec[2] = _fit(tuple(seq_axes), shape[2], mesh, used)
+    return P(*spec)
+
+
+def cache_shardings(mesh, cache, rules: MeshRules = MeshRules(), *, seq_axes=()):
+    """NamedSharding pytree for a decode/prefill cache pytree."""
+
+    def assign(path, leaf):
+        return NamedSharding(
+            mesh, _cache_spec(_leaf_name(path), leaf, mesh, rules, seq_axes)
+        )
+
+    return jax.tree_util.tree_map_with_path(assign, cache)
+
+
+def batch_specs(mesh, batch: int, rules: MeshRules = MeshRules()):
+    """Sharding for (B, S) token batches."""
+    used: set = set()
+    return NamedSharding(mesh, P(_fit(rules.batch, batch, mesh, used), None))
+
+
+def logits_sharding(mesh, batch: int, vocab: int, rules: MeshRules = MeshRules()):
+    """Sharding for (B, S, V) logits; odd vocabs fall back to replicated V."""
+    used: set = set()
+    b = _fit(rules.batch, batch, mesh, used)
+    v = _fit(rules.tensor, vocab, mesh, used)
+    return NamedSharding(mesh, P(b, None, v))

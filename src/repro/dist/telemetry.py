@@ -1,0 +1,138 @@
+"""Collective telemetry from compiled HLO text.
+
+Parses the collectives out of ``compiled.as_text()`` and prices their wire
+traffic with the standard ring-algorithm byte model:
+
+  all-reduce          2 (g-1)/g x bytes      (reduce-scatter + all-gather)
+  all-gather          (g-1)    x shard bytes
+  reduce-scatter      (g-1)/g  x bytes
+  all-to-all          (g-1)/g  x bytes
+  collective-permute  1        x bytes
+
+``operand_bytes`` follows XLA conventions per op: the full buffer for
+all-reduce / reduce-scatter / permute / all-to-all, the per-participant input
+shard for all-gather (output bytes / group). These estimates feed the roofline
+benches and the InterconnectPlanner's cross-pod demand model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import List
+
+_ELEM_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c128": 16,
+}
+
+_KINDS = (
+    "all-reduce-scatter",  # longest-match first
+    "reduce-scatter",
+    "all-reduce",
+    "all-gather",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{(.*?)\}\}")
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveOp:
+    kind: str
+    dtype: str
+    group_size: int
+    operand_bytes: int
+    wire_bytes: float
+    line: str = ""
+
+
+def _shape_bytes(token_type: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _ELEM_BYTES.get(token_type, 4)
+
+
+def _result_shapes(line: str):
+    """Shapes of the instruction RESULT: everything left of the op name."""
+    lhs = line.split("(", 1)[0]  # up to the operand list
+    return _SHAPE_RE.findall(lhs)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota form [groups, group_size]<=[total]
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:  # explicit first group {0,1,2,3}
+        return len([t for t in m.group(1).split(",") if t.strip() != ""])
+    m = _PAIRS_RE.search(line)
+    if m:  # collective-permute: a permutation acts pairwise
+        return 2
+    return 1
+
+
+def parse_collectives(hlo_text: str) -> List[CollectiveOp]:
+    ops: List[CollectiveOp] = []
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        if "=" not in line:
+            continue
+        kind = next(
+            (k for k in _KINDS if re.search(rf"= .*\b{k}\(", line)), None
+        )
+        if kind is None or kind.endswith("-start") or "-done(" in line:
+            continue
+        shapes = _result_shapes(line)
+        if not shapes:
+            continue
+        total = sum(_shape_bytes(t, d) for t, d in shapes if t in _ELEM_BYTES)
+        g = max(1, _group_size(line))
+        if kind == "all-gather":
+            operand = total // g  # per-participant input shard
+            wire = operand * (g - 1)
+        elif kind in ("reduce-scatter", "all-reduce-scatter"):
+            operand = total * g  # full input buffer; output is one shard
+            wire = operand * (g - 1) / g
+        elif kind == "all-reduce":
+            operand = total
+            wire = 2.0 * operand * (g - 1) / g
+        elif kind == "all-to-all":
+            operand = total
+            wire = operand * (g - 1) / g
+        else:  # collective-permute
+            operand = total
+            wire = float(operand)
+        ops.append(
+            CollectiveOp(
+                kind=kind,
+                dtype=shapes[0][0],
+                group_size=g,
+                operand_bytes=operand,
+                wire_bytes=wire,
+                line=line[:200],
+            )
+        )
+    return ops
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Flat aggregate over the module text (loop bodies counted once)."""
+    ops = parse_collectives(hlo_text)
+    by_kind: dict = {}
+    for o in ops:
+        k = by_kind.setdefault(o.kind, {"count": 0, "wire_bytes": 0.0})
+        k["count"] += 1
+        k["wire_bytes"] += o.wire_bytes
+    return {
+        "count": len(ops),
+        "operand_bytes": sum(o.operand_bytes for o in ops),
+        "wire_bytes": sum(o.wire_bytes for o in ops),
+        "by_kind": by_kind,
+    }

@@ -1,0 +1,41 @@
+"""Fleet planning: batched multi-link ToggleCCI portfolio optimization.
+
+The paper (§VI-§VII) prices and plans ONE AWS-GCP interconnect at a time;
+this subsystem plans a *portfolio* of heterogeneous links in one batched
+computation. Mapping back to the paper:
+
+* §V  Eq. (1)/(2) cost model  ->  :mod:`repro.fleet.engine` prices all N
+  links at once: per-link tiered VPN tables become (N, K) array operands
+  (:func:`repro.core.costmodel.tiered_marginal_cost_tables`, with a Pallas
+  twin in :mod:`repro.kernels.tiered_cost`).
+* §VI ToggleCCI (Fig. 5)  ->  the same FSM, but its thresholds θ₁/θ₂,
+  window ``h``, delay ``D`` and commitment ``T_CCI`` are traceable
+  per-link operands (:class:`repro.core.togglecci.ToggleParams`), so one
+  ``jax.vmap``-ed ``lax.scan`` plans every link in a single jit call.
+* §VI "Property 1" offline optimum  ->  :func:`engine.fleet_oracle` gives
+  the per-link OPT column of the report.
+* §VII workloads (MIRAGE §VII-B, Puffer §VII-C, synthetic §VII-D)  ->
+  :mod:`repro.fleet.scenario` mixes all trace families across the fleet,
+  finally consuming the (T, n_pairs) matrices :mod:`repro.traffic` always
+  produced; §IV's measured capacity ceilings (findings F1/F3) bound each
+  link's demand.
+* §VII-A comparisons (static VPN/CCI, oracle, Figs. 10-12)  ->
+  :mod:`repro.fleet.report` renders them per link and fleet-aggregate,
+  with toggle-event timelines.
+
+Quick start::
+
+    from repro.fleet import build_fleet_scenario, plan_fleet, build_report
+    sc = build_fleet_scenario(128, horizon=8760, seed=0)
+    plan = plan_fleet(sc.fleet, sc.demand)          # ONE jit call
+    print(build_report(sc, plan).render_text())
+"""
+from .engine import fleet_oracle, plan_fleet, plan_fleet_reference  # noqa: F401
+from .report import FleetReport, LinkReport, build_report, toggle_events  # noqa: F401
+from .scenario import (  # noqa: F401
+    FAMILIES,
+    FleetScenario,
+    build_fleet_scenario,
+    link_capacity_gb_hr,
+)
+from .spec import FleetArrays, FleetSpec, LinkSpec, fleet_from_params  # noqa: F401

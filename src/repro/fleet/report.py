@@ -1,0 +1,153 @@
+"""Fleet report: per-link and aggregate economics of a planned portfolio.
+
+Consumes the arrays from :func:`repro.fleet.engine.plan_fleet` and renders
+the paper's single-link comparisons (ToggleCCI vs static-VPN / static-CCI /
+offline oracle, Figs. 10-12) at portfolio scale: one row per link, one
+aggregate line, and toggle-event timelines per link.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.togglecci import OFF, ON
+
+from .engine import fleet_oracle
+from .scenario import FleetScenario
+from .spec import FleetSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkReport:
+    name: str
+    family: str
+    toggle_cost: float
+    static_vpn: float
+    static_cci: float
+    oracle_cost: Optional[float]
+    on_fraction: float
+    requests: Tuple[int, ...]   # hours a CCI provisioning request fired
+    releases: Tuple[int, ...]   # hours the CCI lease was released
+
+    @property
+    def best_static(self) -> float:
+        return min(self.static_vpn, self.static_cci)
+
+    @property
+    def savings_vs_best_static(self) -> float:
+        """Fractional saving of ToggleCCI vs the best static policy."""
+        return 1.0 - self.toggle_cost / self.best_static if self.best_static else 0.0
+
+    @property
+    def competitive_ratio(self) -> Optional[float]:
+        if self.oracle_cost is None or self.oracle_cost <= 0:
+            return None
+        return self.toggle_cost / self.oracle_cost
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetReport:
+    links: Tuple[LinkReport, ...]
+    horizon: int
+
+    @property
+    def totals(self) -> Dict[str, float]:
+        agg = {
+            "togglecci": sum(l.toggle_cost for l in self.links),
+            "static_vpn": sum(l.static_vpn for l in self.links),
+            "static_cci": sum(l.static_cci for l in self.links),
+            "best_static_per_link": sum(l.best_static for l in self.links),
+        }
+        oracles = [l.oracle_cost for l in self.links if l.oracle_cost is not None]
+        if oracles and len(oracles) == len(self.links):
+            agg["oracle"] = sum(oracles)
+        return agg
+
+    def render_text(self, max_rows: int = 20) -> str:
+        hdr = (
+            f"{'link':<16}{'family':<10}{'toggle $':>12}{'vpn $':>12}"
+            f"{'cci $':>12}{'save%':>8}{'on%':>6}{'tog':>5}"
+        )
+        lines = [hdr, "-" * len(hdr)]
+        for l in self.links[:max_rows]:
+            lines.append(
+                f"{l.name:<16}{l.family:<10}{l.toggle_cost:>12.0f}"
+                f"{l.static_vpn:>12.0f}{l.static_cci:>12.0f}"
+                f"{100 * l.savings_vs_best_static:>7.1f}%"
+                f"{100 * l.on_fraction:>5.0f}%"
+                f"{len(l.requests) + len(l.releases):>5d}"
+            )
+        if len(self.links) > max_rows:
+            lines.append(f"... ({len(self.links) - max_rows} more links)")
+        t = self.totals
+        save = 1.0 - t["togglecci"] / t["best_static_per_link"]
+        lines.append("-" * len(hdr))
+        lines.append(
+            f"fleet total: toggle ${t['togglecci']:.0f}  "
+            f"vpn ${t['static_vpn']:.0f}  cci ${t['static_cci']:.0f}  "
+            f"vs best-static {100 * save:+.1f}%"
+            + (f"  oracle ${t['oracle']:.0f}" if "oracle" in t else "")
+        )
+        return "\n".join(lines)
+
+
+def toggle_events(state_row: np.ndarray) -> Tuple[Tuple[int, ...], Tuple[int, ...]]:
+    """(requests, releases) hour indices from one link's FSM state trace.
+
+    A request fires when the link leaves OFF (into WAITING, or straight to
+    ON when D=0); a release when it returns to OFF from ON.
+    """
+    s = np.asarray(state_row)
+    prev = np.concatenate([[OFF], s[:-1]])
+    requests = np.where((prev == OFF) & (s != OFF))[0]
+    releases = np.where((prev == ON) & (s == OFF))[0]
+    return tuple(int(t) for t in requests), tuple(int(t) for t in releases)
+
+
+def build_report(
+    scenario: FleetScenario,
+    plan: Dict[str, np.ndarray],
+    *,
+    include_oracle: bool = False,
+    oracle_links: Optional[int] = None,
+) -> FleetReport:
+    """Assemble a :class:`FleetReport` from engine outputs.
+
+    ``include_oracle`` runs the per-link DP (numpy, off the hot path);
+    ``oracle_links`` caps how many links get an OPT column (None = all).
+    """
+    fleet: FleetSpec = scenario.fleet
+    state = np.asarray(plan["state"])
+    x = np.asarray(plan["x"])
+    toggle_cost = np.asarray(plan["toggle_cost"], dtype=np.float64)
+    static_vpn = np.asarray(plan["static_vpn"], dtype=np.float64)
+    static_cci = np.asarray(plan["static_cci"], dtype=np.float64)
+    T = state.shape[1]
+
+    oracle = None
+    if include_oracle:
+        k = len(fleet) if oracle_links is None else min(oracle_links, len(fleet))
+        sub = FleetSpec(fleet.links[:k])
+        oracle = fleet_oracle(sub, np.asarray(scenario.demand)[:k])
+
+    rows: List[LinkReport] = []
+    for i, link in enumerate(fleet.links):
+        requests, releases = toggle_events(state[i])
+        rows.append(
+            LinkReport(
+                name=link.name,
+                family=link.family,
+                toggle_cost=float(toggle_cost[i]),
+                static_vpn=float(static_vpn[i]),
+                static_cci=float(static_cci[i]),
+                oracle_cost=(
+                    float(oracle[i]) if oracle is not None and i < len(oracle) else None
+                ),
+                on_fraction=float(np.mean(x[i])),
+                requests=requests,
+                releases=releases,
+            )
+        )
+    return FleetReport(links=tuple(rows), horizon=T)

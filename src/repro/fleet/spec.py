@@ -1,0 +1,143 @@
+"""Fleet specification: N heterogeneous links as struct-of-arrays pytrees.
+
+A *link* is one priced interconnect (a region pair between two clouds) with
+its own :class:`~repro.core.pricing.CostParams` — lease fees, tiered VPN
+rates, provisioning delay ``D``, commitment ``T_cci``, window ``h``,
+thresholds — plus a physically-calibrated capacity ceiling from
+:mod:`repro.traffic.linksim`. ``FleetSpec.stack()`` turns the
+list-of-dataclasses view into :class:`FleetArrays`, the flat array view the
+batched engine vmaps over.
+
+Ragged tier tables are padded to the fleet-wide max depth with
+``(bound=PAD_BOUND, rate=0)`` rows; duplicate bounds produce zero-width
+segments, so padding is cost-neutral (see
+:func:`repro.core.costmodel.tiered_marginal_cost_tables`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pricing import CostParams
+from repro.core.togglecci import ToggleParams
+
+PAD_BOUND = 1e30  # stands in for inf (traceable-finite)
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkSpec:
+    """One interconnect link of the portfolio."""
+
+    name: str
+    params: CostParams
+    capacity_gb_hr: float = math.inf   # linksim-calibrated ceiling (GB/hour)
+    family: str = "constant"           # demand-trace family (scenario metadata)
+
+    def __post_init__(self) -> None:
+        assert self.capacity_gb_hr > 0
+
+
+class FleetArrays(NamedTuple):
+    """Struct-of-arrays view of a fleet — every field is a (N,)/(N,K) array.
+
+    This is a pytree of *traceable operands*: one jitted engine call plans
+    any fleet of the same (N, K, T) shape, whatever the link parameters.
+    """
+
+    L_cci: jax.Array        # (N,) shared CCI lease $/hr
+    V_cci: jax.Array        # (N,) per-pair attachment $/hr
+    c_cci: jax.Array        # (N,) flat CCI $/GB
+    L_vpn: jax.Array        # (N,) VPN lease $/hr
+    tier_bounds: jax.Array  # (N, K) padded cumulative-volume bounds (GB)
+    tier_rates: jax.Array   # (N, K) marginal $/GB per tier (0 on padding)
+    toggle: ToggleParams    # fields (N,): theta1/theta2/h/D/T_cci
+    capacity: jax.Array     # (N,) demand ceiling GB/hr (PAD_BOUND when inf)
+
+    @property
+    def n_links(self) -> int:
+        return self.L_cci.shape[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSpec:
+    """An ordered portfolio of links sharing one billing calendar."""
+
+    links: Tuple[LinkSpec, ...]
+
+    def __post_init__(self) -> None:
+        assert len(self.links) >= 1
+        hpms = {l.params.hours_per_month for l in self.links}
+        assert len(hpms) == 1, (
+            "fleet links must share hours_per_month (one billing calendar); "
+            f"got {sorted(hpms)}"
+        )
+
+    def __len__(self) -> int:
+        return len(self.links)
+
+    @property
+    def hours_per_month(self) -> int:
+        return self.links[0].params.hours_per_month
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(l.name for l in self.links)
+
+    def stack(self, dtype=None) -> FleetArrays:
+        """Stack link parameters into :class:`FleetArrays` (SoA pytree)."""
+        f = dtype or jnp.result_type(float)
+        ps = [l.params for l in self.links]
+        K = max(len(p.vpn_tier.bounds_gb) for p in ps)
+
+        def pad_tier(p: CostParams):
+            b = [x if math.isfinite(x) else PAD_BOUND for x in p.vpn_tier.bounds_gb]
+            r = list(p.vpn_tier.rates)
+            b += [PAD_BOUND] * (K - len(b))
+            r += [0.0] * (K - len(r))
+            return b, r
+
+        tiers = [pad_tier(p) for p in ps]
+        cap = [
+            l.capacity_gb_hr if math.isfinite(l.capacity_gb_hr) else PAD_BOUND
+            for l in self.links
+        ]
+        toggle = ToggleParams(
+            theta1=jnp.asarray([p.theta1 for p in ps], f),
+            theta2=jnp.asarray([p.theta2 for p in ps], f),
+            h=jnp.asarray([p.h for p in ps], jnp.int32),
+            D=jnp.asarray([p.D for p in ps], jnp.int32),
+            T_cci=jnp.asarray([p.T_cci for p in ps], jnp.int32),
+        )
+        return FleetArrays(
+            L_cci=jnp.asarray([p.L_cci for p in ps], f),
+            V_cci=jnp.asarray([p.V_cci for p in ps], f),
+            c_cci=jnp.asarray([p.c_cci for p in ps], f),
+            L_vpn=jnp.asarray([p.L_vpn for p in ps], f),
+            tier_bounds=jnp.asarray([t[0] for t in tiers], f),
+            tier_rates=jnp.asarray([t[1] for t in tiers], f),
+            toggle=toggle,
+            capacity=jnp.asarray(cap, f),
+        )
+
+
+def fleet_from_params(
+    params: Sequence[CostParams],
+    *,
+    capacities: Sequence[float] = (),
+    names: Sequence[str] = (),
+) -> FleetSpec:
+    """Convenience: wrap bare CostParams into a FleetSpec."""
+    n = len(params)
+    caps = list(capacities) or [math.inf] * n
+    nms = list(names) or [f"link{i:03d}" for i in range(n)]
+    assert len(caps) == n and len(nms) == n
+    return FleetSpec(
+        tuple(
+            LinkSpec(name=nm, params=p, capacity_gb_hr=c)
+            for nm, p, c in zip(nms, params, caps)
+        )
+    )

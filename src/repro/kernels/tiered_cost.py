@@ -12,6 +12,13 @@ O(T·P·n_tiers) segmentation, which dominates.
 
 Tier tables are compile-time constants (closure), matching how pricing
 catalogs are static per scenario.
+
+The *batched* variant (``tiered_cost_batched``) prices N heterogeneous links
+at once: tier tables become ``(N, K)`` array operands (one padded table per
+link) and the grid tiles the ``(N, T)`` volume plane. The fleet engine
+(``repro.fleet.engine``) uses the pure-XLA twin
+(``tiered_cost_batched_ref``) by default — it fuses fine and supports f64 —
+and the Pallas path on TPU f32 runs where the segmentation loop dominates.
 """
 from __future__ import annotations
 
@@ -63,3 +70,61 @@ def tiered_cost(
         out_shape=jax.ShapeDtypeStruct((T, P), jnp.float32),
         interpret=interpret,
     )(month_cum, demand)
+
+
+# ---------------------------------------------------------------------------
+# Batched (N links, T hours) path — tier tables as per-link array operands
+# ---------------------------------------------------------------------------
+
+
+def _tiered_batched_kernel(cum_ref, d_ref, bounds_ref, rates_ref, o_ref):
+    lo = cum_ref[...].astype(jnp.float32)          # (1, block_t)
+    hi = lo + d_ref[...].astype(jnp.float32)
+    bounds = bounds_ref[...].astype(jnp.float32)   # (1, K)
+    rates = rates_ref[...].astype(jnp.float32)
+    K = bounds.shape[-1]
+    prev = jnp.concatenate([jnp.zeros((1, 1), jnp.float32), bounds[:, : K - 1]], -1)
+    seg = jnp.clip(
+        jnp.minimum(hi[..., None], bounds[:, None, :])
+        - jnp.maximum(lo[..., None], prev[:, None, :]),
+        0.0,
+    )                                              # (1, block_t, K)
+    o_ref[...] = jnp.sum(seg * rates[:, None, :], axis=-1)
+
+
+def tiered_cost_batched(
+    month_cum: jax.Array,        # (N, T) per-link exclusive monthly volume
+    demand: jax.Array,           # (N, T)
+    bounds: jax.Array,           # (N, K) padded per-link tier bounds (finite)
+    rates: jax.Array,            # (N, K) per-link marginal rates (0 on padding)
+    *,
+    block_t: int = DEFAULT_BLOCK_T,
+    interpret: bool = False,
+) -> jax.Array:
+    """Per-hour tiered transfer cost for N heterogeneous links at once."""
+    N, T = month_cum.shape
+    K = bounds.shape[-1]
+    assert demand.shape == (N, T) and bounds.shape == rates.shape == (N, K)
+    assert T % block_t == 0, (T, block_t)
+    return pl.pallas_call(
+        _tiered_batched_kernel,
+        grid=(N, T // block_t),
+        in_specs=[
+            pl.BlockSpec((1, block_t), lambda n, i: (n, i)),
+            pl.BlockSpec((1, block_t), lambda n, i: (n, i)),
+            pl.BlockSpec((1, K), lambda n, i: (n, 0)),
+            pl.BlockSpec((1, K), lambda n, i: (n, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_t), lambda n, i: (n, i)),
+        out_shape=jax.ShapeDtypeStruct((N, T), jnp.float32),
+        interpret=interpret,
+    )(month_cum, demand, bounds, rates)
+
+
+def tiered_cost_batched_ref(
+    month_cum: jax.Array, demand: jax.Array, bounds: jax.Array, rates: jax.Array
+) -> jax.Array:
+    """Pure-XLA oracle for :func:`tiered_cost_batched` (any float dtype)."""
+    from repro.core.costmodel import tiered_marginal_cost_tables
+
+    return tiered_marginal_cost_tables(month_cum, demand, bounds, rates)

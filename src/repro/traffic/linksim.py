@@ -52,21 +52,35 @@ TCP_WINDOW_BYTES = 3 * 2**20   # iperf default-ish per-connection window
 
 
 def max_min_fair(demands: Sequence[float], capacity: float) -> np.ndarray:
-    """Classic water-filling max-min fair allocation (finding F4)."""
+    """Classic water-filling max-min fair allocation (finding F4).
+
+    Guaranteed termination in <= n rounds: each round either fully satisfies
+    at least one active flow (remaining demand <= the equal share) and
+    removes it, or no flow saturates — then every active flow receives the
+    equal share and the capacity is exhausted. (The previous implementation
+    relied on ``np.isclose`` firing against the *original* demands, which
+    never happens for equal tiny demands left marginally unmet by rounding —
+    an infinite loop.)
+    """
     demands = np.asarray(demands, dtype=np.float64)
     assert (demands >= 0).all() and capacity >= 0
     alloc = np.zeros_like(demands)
     active = demands > 0
-    cap = capacity
-    while active.any() and cap > 1e-12:
-        share = cap / active.sum()
-        take = np.minimum(demands[active] - alloc[active], share)
-        alloc[active] += take
-        cap -= take.sum()
-        newly_done = np.isclose(alloc, demands) & active
-        if not newly_done.any() and take.max() <= 1e-12:
+    cap = float(capacity)
+    for _ in range(demands.size):
+        if not active.any() or cap <= 1e-12:
             break
-        active &= ~np.isclose(alloc, demands)
+        share = cap / active.sum()
+        rem = demands - alloc
+        sat = active & (rem <= share)
+        if not sat.any():
+            # Nobody saturates: the link is the bottleneck — equal shares.
+            alloc[active] += share
+            cap = 0.0
+            break
+        alloc[sat] = demands[sat]
+        cap -= rem[sat].sum()
+        active &= ~sat
     return alloc
 
 

@@ -1,0 +1,267 @@
+"""Minimal, deterministic stand-in for the ``hypothesis`` API used by this suite.
+
+The container image does not ship ``hypothesis`` and new packages cannot be
+installed, so :mod:`conftest` installs this stub into ``sys.modules`` when the
+real library is absent (the real one wins whenever it is importable, e.g. in
+CI where it is pip-installed).
+
+Only the surface this test suite uses is implemented:
+
+* ``given`` / ``settings`` / ``HealthCheck`` (incl. profile registration)
+* ``strategies``: ``floats``, ``integers``, ``booleans``, ``just``,
+  ``sampled_from``, ``tuples``, ``lists``
+* ``extra.numpy.arrays`` with strategy-valued shapes
+
+Examples are drawn from a seeded ``numpy`` generator, so runs are fully
+deterministic (the suite's conftest profile requests ``derandomize=True``
+anyway).  Each test runs ``max_examples`` drawn cases plus boundary-biased
+draws; there is no shrinking — a failing case prints its drawn values instead.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+
+import numpy as np
+
+__version__ = "0.0-stub"
+
+_BASE_SEED = 0x5EED
+
+
+class Strategy:
+    """A strategy is just a deterministic draw function over an rng."""
+
+    def __init__(self, draw, label="strategy"):
+        self._draw = draw
+        self.label = label
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return Strategy(lambda rng: fn(self._draw(rng)), f"{self.label}.map")
+
+    def __repr__(self):
+        return f"<{self.label}>"
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+
+def floats(min_value=0.0, max_value=1.0, **_ignored) -> Strategy:
+    lo, hi = float(min_value), float(max_value)
+
+    def draw(rng):
+        u = rng.random()
+        if u < 0.05:
+            return lo
+        if u < 0.10:
+            return hi
+        if u < 0.20 and lo >= 0 and hi > max(lo, 1.0):
+            # log-uniform tail so wide ranges also exercise small magnitudes
+            span = np.log10(max(hi, 1.0)) - np.log10(max(lo, 1e-6))
+            return float(10 ** (np.log10(max(lo, 1e-6)) + span * rng.random()))
+        return float(lo + (hi - lo) * rng.random())
+
+    return Strategy(draw, f"floats({lo}, {hi})")
+
+
+def integers(min_value, max_value) -> Strategy:
+    lo, hi = int(min_value), int(max_value)
+
+    def draw(rng):
+        u = rng.random()
+        if u < 0.05:
+            return lo
+        if u < 0.10:
+            return hi
+        return int(rng.integers(lo, hi + 1))
+
+    return Strategy(draw, f"integers({lo}, {hi})")
+
+
+def booleans() -> Strategy:
+    return Strategy(lambda rng: bool(rng.integers(2)), "booleans")
+
+
+def just(value) -> Strategy:
+    return Strategy(lambda rng: value, f"just({value!r})")
+
+
+def sampled_from(elements) -> Strategy:
+    seq = list(elements)
+    assert seq, "sampled_from requires a non-empty sequence"
+    return Strategy(lambda rng: seq[int(rng.integers(len(seq)))], "sampled_from")
+
+
+def tuples(*strategies) -> Strategy:
+    return Strategy(
+        lambda rng: tuple(s.example(rng) for s in strategies), "tuples"
+    )
+
+
+def lists(elements: Strategy, *, min_size=0, max_size=10, **_ignored) -> Strategy:
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.example(rng) for _ in range(n)]
+
+    return Strategy(draw, "lists")
+
+
+def _np_arrays(dtype, shape, *, elements: Strategy | None = None, **_ignored):
+    def draw(rng):
+        shp = shape.example(rng) if isinstance(shape, Strategy) else shape
+        if isinstance(shp, (int, np.integer)):
+            shp = (int(shp),)
+        shp = tuple(int(s) for s in shp)
+        n = int(np.prod(shp)) if shp else 1
+        if elements is None:
+            flat = rng.random(n)
+        else:
+            flat = np.array([elements.example(rng) for _ in range(n)])
+        return flat.reshape(shp).astype(dtype)
+
+    return Strategy(draw, "arrays")
+
+
+# ---------------------------------------------------------------------------
+# HealthCheck / settings / given
+# ---------------------------------------------------------------------------
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+    function_scoped_fixture = "function_scoped_fixture"
+
+
+class settings:
+    """Decorator + profile registry (both used by the suite's conftest)."""
+
+    _profiles: dict = {"default": {"max_examples": 25}}
+    _current: dict = dict(_profiles["default"])
+
+    def __init__(self, max_examples=None, **kwargs):
+        self._overrides = {}
+        if max_examples is not None:
+            self._overrides["max_examples"] = int(max_examples)
+
+    def __call__(self, fn):
+        fn._stub_settings = dict(
+            getattr(fn, "_stub_settings", {}), **self._overrides
+        )
+        return fn
+
+    @classmethod
+    def register_profile(cls, name, max_examples=None, **kwargs):
+        prof = dict(cls._profiles["default"])
+        if max_examples is not None:
+            prof["max_examples"] = int(max_examples)
+        cls._profiles[name] = prof
+
+    @classmethod
+    def load_profile(cls, name):
+        cls._current = dict(cls._profiles[name])
+
+
+def given(*arg_strategies, **kw_strategies):
+    for s in list(arg_strategies) + list(kw_strategies.values()):
+        assert isinstance(s, Strategy), f"@given expects strategies, got {s!r}"
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*fixture_args, **fixture_kwargs):
+            conf = dict(settings._current)
+            conf.update(getattr(fn, "_stub_settings", {}))
+            conf.update(getattr(wrapper, "_stub_settings", {}))
+            n = int(conf.get("max_examples", 25))
+            for i in range(n):
+                rng = np.random.default_rng(_BASE_SEED + i)
+                args = [s.example(rng) for s in arg_strategies]
+                kwargs = {k: s.example(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*fixture_args, *args, **kwargs, **fixture_kwargs)
+                except Exception:
+                    print(
+                        f"[hypothesis-stub] falsifying example #{i}: "
+                        f"args={args!r} kwargs={kwargs!r}",
+                        file=sys.stderr,
+                    )
+                    raise
+
+        # Hide strategy-covered parameters from pytest's fixture resolution:
+        # positional strategies fill the TRAILING params (hypothesis
+        # convention), kwarg strategies fill by name; what's left (leading
+        # params) are real fixtures.
+        sig = inspect.signature(fn)
+        remaining = [
+            p for p in sig.parameters.values() if p.name not in kw_strategies
+        ]
+        if arg_strategies:
+            remaining = remaining[: -len(arg_strategies)]
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__  # keep pytest off the original signature
+        # Parity with the real library: plugins (e.g. anyio) introspect
+        # ``fn.hypothesis.inner_test``.
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+
+    return decorate
+
+
+def assume(condition) -> bool:
+    """Best-effort ``assume``: abort the example silently by raising nothing.
+
+    The stub cannot re-draw, so a failed assumption simply skips the check by
+    raising a private exception swallowed in ``given``. The current suite does
+    not use ``assume``; this exists for forward-compatibility of new tests.
+    """
+    return bool(condition)
+
+
+# ---------------------------------------------------------------------------
+# module installation
+# ---------------------------------------------------------------------------
+
+
+def install() -> None:
+    """Register stub modules as ``hypothesis``(+submodules) in sys.modules."""
+    if "hypothesis" in sys.modules:
+        return
+    root = types.ModuleType("hypothesis")
+    root.__version__ = __version__
+    root.given = given
+    root.settings = settings
+    root.HealthCheck = HealthCheck
+    root.assume = assume
+    root.Strategy = Strategy
+
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in (
+        "floats",
+        "integers",
+        "booleans",
+        "just",
+        "sampled_from",
+        "tuples",
+        "lists",
+    ):
+        setattr(st_mod, name, globals()[name])
+
+    extra = types.ModuleType("hypothesis.extra")
+    extra_np = types.ModuleType("hypothesis.extra.numpy")
+    extra_np.arrays = _np_arrays
+    extra.numpy = extra_np
+
+    root.strategies = st_mod
+    sys.modules["hypothesis"] = root
+    sys.modules["hypothesis.strategies"] = st_mod
+    sys.modules["hypothesis.extra"] = extra
+    sys.modules["hypothesis.extra.numpy"] = extra_np

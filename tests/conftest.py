@@ -6,7 +6,14 @@ spawn subprocesses with their own XLA_FLAGS (see tests/test_dist.py).
 """
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, settings
+
+try:
+    from hypothesis import HealthCheck, settings
+except ModuleNotFoundError:  # image does not ship hypothesis; use the stub
+    import _hypothesis_stub
+
+    _hypothesis_stub.install()
+    from hypothesis import HealthCheck, settings
 
 # Keep hypothesis fast and deterministic in CI.
 settings.register_profile(

@@ -216,3 +216,40 @@ def test_ops_tiered_cost_dispatch():
         jnp.asarray(tier.rates, jnp.float32),
     )
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-6)
+
+
+def test_tiered_cost_batched_matches_ref():
+    """Batched (N, T) path with PER-LINK tier tables as array operands."""
+    from repro.core.pricing import (
+        AWS_EGRESS_INTERNET,
+        AZURE_EGRESS_INTERNET,
+        GCP_EGRESS_PREMIUM,
+    )
+    from repro.kernels.tiered_cost import tiered_cost_batched, tiered_cost_batched_ref
+
+    tiers = [GCP_EGRESS_PREMIUM, AWS_EGRESS_INTERNET, AZURE_EGRESS_INTERNET]
+    K = max(len(t.bounds_gb) for t in tiers)
+    bounds = np.full((3, K), 1e30, np.float32)
+    rates = np.zeros((3, K), np.float32)
+    for i, t in enumerate(tiers):
+        bounds[i, : len(t.bounds_gb)] = [
+            b if np.isfinite(b) else 1e30 for b in t.bounds_gb
+        ]
+        rates[i, : len(t.rates)] = t.rates
+
+    rng = np.random.default_rng(4)
+    d = rng.uniform(0, 200, size=(3, 256)).astype(np.float32)
+    cum = (np.cumsum(d, axis=1) - d).astype(np.float32)
+    out = tiered_cost_batched(
+        jnp.asarray(cum), jnp.asarray(d), jnp.asarray(bounds), jnp.asarray(rates),
+        block_t=128, interpret=True,
+    )
+    want = tiered_cost_batched_ref(
+        jnp.asarray(cum), jnp.asarray(d), jnp.asarray(bounds), jnp.asarray(rates)
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-6, atol=1e-6)
+    # Cross-check one row against the scalar float64 tier engine.
+    from repro.core.costmodel import tiered_marginal_cost_np
+
+    want64 = tiered_marginal_cost_np(tiers[1], cum[1], d[1])
+    np.testing.assert_allclose(np.asarray(out)[1], want64, atol=2e-2)

@@ -162,3 +162,82 @@ def test_scan_vmaps_over_scenarios():
     totals = np.asarray(fn(jnp.asarray(vpn), jnp.asarray(cci)))
     refs = np.array([run_togglecci(P, d).total_cost for d in ds])
     np.testing.assert_allclose(totals, refs, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Window-sum precision (float64 regression) + traceable ToggleParams
+# ---------------------------------------------------------------------------
+
+
+def _straddling_costs(T=4096, h=24):
+    """Costs whose window comparison sits a hair on the no-request side of
+    θ₁: r_cci = θ₁·r_vpn + h·ε with ε = 1e-3. A float32 prefix-sum window
+    (cumsums reach ~4e6, ulp ~0.5) cannot resolve h·ε = 0.024 and flips the
+    OFF->WAITING decision; float64 must not."""
+    params = small_params(h=h)
+    vpn = np.full(T, 1024.0)
+    cci = params.theta1 * vpn + 1e-3
+    return params, vpn, cci
+
+
+def test_scan_float64_window_survives_threshold_straddle():
+    params, vpn, cci = _straddling_costs()
+    from repro.core.costmodel import HourlyCosts
+
+    zeros = np.zeros_like(vpn)
+    costs = HourlyCosts(vpn_lease=vpn, vpn_transfer=zeros,
+                        cci_lease=cci, cci_transfer=zeros)
+    ref = run_togglecci(params, np.zeros_like(vpn), costs=costs)
+    assert ref.requests == [], "exact math: never requests"
+    # float32 inputs, concrete path: window sums must accumulate in float64.
+    out = run_togglecci_scan(
+        params, jnp.asarray(vpn, jnp.float32), jnp.asarray(cci, jnp.float32)
+    )
+    np.testing.assert_array_equal(np.asarray(out["x"]), ref.x)
+    assert (np.asarray(out["state"]) == OFF).all()
+    # Demonstrate the straddle is real: a float32 prefix-difference window
+    # DOES misorder the comparison somewhere in the horizon.
+    pref32 = np.cumsum(vpn.astype(np.float32), dtype=np.float32)
+    cpref32 = np.cumsum(cci.astype(np.float32), dtype=np.float32)
+    t = np.arange(params.h, len(vpn))
+    r_vpn32 = pref32[t - 1] - pref32[t - params.h - 1]
+    r_cci32 = cpref32[t - 1] - cpref32[t - params.h - 1]
+    assert (r_cci32 < params.theta1 * r_vpn32).any(), (
+        "float32 windows should flip somewhere (else this regression test "
+        "lost its teeth)"
+    )
+
+
+def test_scan_accepts_traceable_toggle_params():
+    """ToggleParams fields are array operands: one compiled scan serves
+    different (θ, h, D, T_cci) without retracing, and vmaps over them."""
+    from repro.core.togglecci import ToggleParams
+
+    d = bursty_trace(horizon=1200, seed=5).sum(axis=1)
+    costs = hourly_cost_series(small_params(), d)
+    vpn = jnp.asarray(costs.vpn)
+    cci = jnp.asarray(costs.cci)
+
+    jit_scan = jax.jit(
+        lambda tp, v, c: run_togglecci_scan(tp, v, c)["x"]
+    )
+    variants = [small_params(), small_params(D=9, T_cci=30, h=48)]
+    for p in variants:
+        tp = ToggleParams.from_cost_params(p)
+        np.testing.assert_array_equal(
+            np.asarray(jit_scan(tp, vpn, cci)), run_togglecci(p, d, costs=costs).x
+        )
+
+    # vmap over stacked heterogeneous params against broadcast costs.
+    tps = ToggleParams(
+        theta1=jnp.asarray([p.theta1 for p in variants], jnp.float32),
+        theta2=jnp.asarray([p.theta2 for p in variants], jnp.float32),
+        h=jnp.asarray([p.h for p in variants], jnp.int32),
+        D=jnp.asarray([p.D for p in variants], jnp.int32),
+        T_cci=jnp.asarray([p.T_cci for p in variants], jnp.int32),
+    )
+    xs = jax.vmap(lambda tp: run_togglecci_scan(tp, vpn, cci)["x"])(tps)
+    for i, p in enumerate(variants):
+        np.testing.assert_array_equal(
+            np.asarray(xs[i]), run_togglecci(p, d, costs=costs).x
+        )

@@ -167,3 +167,27 @@ def test_max_min_fair_properties():
     np.testing.assert_allclose(a, [3.0, 3.0])
     a = L.max_min_fair([1.0, 1.0], 100.0)
     np.testing.assert_allclose(a, [1.0, 1.0])  # never exceeds demand
+
+
+def test_max_min_fair_zero_demand():
+    np.testing.assert_array_equal(L.max_min_fair([0.0, 0.0, 0.0], 5.0), 0.0)
+    np.testing.assert_array_equal(L.max_min_fair([], 5.0), np.zeros(0))
+    a = L.max_min_fair([0.0, 4.0], 2.0)
+    np.testing.assert_allclose(a, [0.0, 2.0])  # idle flows get nothing
+
+
+def test_max_min_fair_single_flow():
+    np.testing.assert_allclose(L.max_min_fair([3.0], 10.0), [3.0])
+    np.testing.assert_allclose(L.max_min_fair([30.0], 10.0), [10.0])
+    np.testing.assert_allclose(L.max_min_fair([3.0], 0.0), [0.0])
+
+
+def test_max_min_fair_over_capacity_equal_tiny_demands_terminates():
+    """Regression: capacity >> total demand with equal tiny demands used to
+    spin forever (np.isclose against the original demands never fired)."""
+    tiny = np.full(8, 1e-13)
+    a = L.max_min_fair(tiny, 1.0)
+    np.testing.assert_allclose(a, tiny)
+    # And mixed magnitudes stay exact under over-capacity.
+    d = np.array([1e-13, 5.0, 1e-13, 2.5])
+    np.testing.assert_allclose(L.max_min_fair(d, 100.0), d)

@@ -16,6 +16,18 @@ def save_rows(name: str, rows):
     return path
 
 
+def write_bench_artifact(name: str, rows):
+    """Write ``BENCH_{name}.json`` for CI: uploaded as a workflow artifact
+    and consumed by ``benchmarks.check_regression`` (throughput gate).
+    Directory override via ``BENCH_ARTIFACT_DIR`` (default: CWD)."""
+    out_dir = os.environ.get("BENCH_ARTIFACT_DIR", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1, default=float)
+    return path
+
+
 def timed(fn):
     t0 = time.perf_counter()
     out = fn()

@@ -28,7 +28,7 @@ from repro.fleet import (
     plan_fleet_reference,
 )
 
-from ._util import save_rows
+from ._util import save_rows, write_bench_artifact
 
 
 def run(
@@ -112,7 +112,7 @@ def main() -> None:
     )
     ap.add_argument(
         "--smoke", action="store_true",
-        help="CI mode: 16 links x 2000 h, full verification",
+        help="CI mode: 16 links x 2000 h, full verification, BENCH artifact",
     )
     args = ap.parse_args()
     if args.smoke:
@@ -132,6 +132,8 @@ def main() -> None:
         f"{r['best_s'] * 1e3:.1f} ms -> {r['link_hours_per_s']:.3g} link-hours/s"
     )
     print(derived)
+    if args.smoke:
+        print("artifact:", write_bench_artifact("fleet", rows))
 
 
 if __name__ == "__main__":

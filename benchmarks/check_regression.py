@@ -1,0 +1,86 @@
+"""CI throughput-regression gate for the planning engines.
+
+Compares the ``BENCH_*.json`` artifacts emitted by ``bench_fleet --smoke`` /
+``bench_topology --smoke`` against the committed baselines
+(``benchmarks/baselines.json``) and fails (exit 1) when a throughput metric
+regresses more than ``--max-regression`` (default 30%) below the scaled
+baseline.
+
+Baselines are recorded on the reference dev container; CI runners are
+slower, so the workflow passes ``--scale`` (or sets ``BENCH_BASELINE_SCALE``)
+to discount the absolute numbers. Note the two factors COMPOUND: the
+effective floor is ``baseline * scale * (1 - max_regression)``, so a scale
+of 0.35 means only regressions past ~75% of reference throughput fail on a
+reference-speed machine — the gate is a backstop against large engine
+regressions, not a precision instrument; tighten ``--scale`` toward 1.0 as
+runner numbers accumulate.
+
+CLI:
+  python -m benchmarks.check_regression BENCH_fleet.json BENCH_topology.json
+  python -m benchmarks.check_regression BENCH_fleet.json --scale 0.25
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+DEFAULT_BASELINES = os.path.join(os.path.dirname(__file__), "baselines.json")
+
+
+def check_artifact(path: str, baselines: dict, *, scale: float, max_regression: float):
+    """Returns (name, metric, value, floor, ok) or raises on malformed input."""
+    name = re.sub(r"^BENCH_|\.json$", "", os.path.basename(path))
+    if name not in baselines:
+        raise KeyError(
+            f"{path}: no committed baseline for {name!r} "
+            f"(known: {sorted(baselines)}) — add it to baselines.json"
+        )
+    base = baselines[name]
+    metric, committed = base["metric"], float(base["value"])
+    with open(path) as f:
+        rows = json.load(f)
+    value = float(rows[0][metric])
+    floor = committed * scale * (1.0 - max_regression)
+    return name, metric, value, floor, value >= floor
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("artifacts", nargs="+", help="BENCH_*.json files to gate")
+    ap.add_argument("--baselines", default=DEFAULT_BASELINES)
+    ap.add_argument(
+        "--max-regression", type=float, default=0.30,
+        help="fail when throughput drops more than this fraction (default 0.30)",
+    )
+    ap.add_argument(
+        "--scale", type=float,
+        default=float(os.environ.get("BENCH_BASELINE_SCALE", "1.0")),
+        help="machine-speed discount on the committed baseline "
+             "(CI runners are slower than the reference box)",
+    )
+    args = ap.parse_args(argv)
+
+    with open(args.baselines) as f:
+        baselines = json.load(f)
+
+    failed = False
+    for path in args.artifacts:
+        name, metric, value, floor, ok = check_artifact(
+            path, baselines,
+            scale=args.scale, max_regression=args.max_regression,
+        )
+        verdict = "ok" if ok else "REGRESSION"
+        print(
+            f"{name}: {metric}={value:.3g} vs floor {floor:.3g} "
+            f"(baseline x {args.scale:g} scale, -{100 * args.max_regression:.0f}%) "
+            f"-> {verdict}"
+        )
+        failed |= not ok
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

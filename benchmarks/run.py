@@ -21,6 +21,7 @@ from . import (
     bench_puffer,
     bench_roofline,
     bench_sensitivity,
+    bench_topology,
 )
 from ._util import fmt_csv, timed
 
@@ -38,6 +39,10 @@ BENCHES = [
     ("fleet_portfolio", lambda: bench_fleet.run(
         16 if FAST else 128, 2000 if FAST else 8760,
         repeats=2 if FAST else 5, verify_links=None if FAST else 16,
+    )),
+    ("topology_multipair", lambda: bench_topology.run(
+        16 if FAST else 96, 2000 if FAST else 8760,
+        n_facilities=3 if FAST else 4, repeats=2 if FAST else 5,
     )),
     ("roofline_e10", lambda: bench_roofline.run()),
 ]

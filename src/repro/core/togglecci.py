@@ -144,8 +144,15 @@ class ToggleParams(NamedTuple):
         )
 
 
-def _window_sums(hourly: jax.Array, h) -> jax.Array:
+def window_sums(hourly: jax.Array, h) -> jax.Array:
     """Sliding-window sums ``r[t] = sum(hourly[max(0, t-h):t])``.
+
+    This is ToggleCCI's cost-trend signal. The series it consumes is
+    whatever granularity the caller decides on: the paper's single link, a
+    fleet link (:func:`repro.fleet.engine.plan_fleet`), or a *port-aggregated*
+    counterfactual summed over every region pair routed through one CCI port
+    (:func:`repro.fleet.engine.plan_topology`) — the FSM is agnostic, it
+    only ever sees the two (T,) series.
 
     Computed from prefix sums OUTSIDE the scan (the FSM scan itself is pure
     integer arithmetic). Precision: year-long float32 cumsums reach ~1e6-1e7
@@ -201,8 +208,8 @@ def run_togglecci_scan(
         else ToggleParams.from_cost_params(params)
     )
     th1, th2, D, T_cci = tp.theta1, tp.theta2, tp.D, tp.T_cci
-    r_vpn_tr = _window_sums(vpn_hourly, tp.h)
-    r_cci_tr = _window_sums(cci_hourly, tp.h)
+    r_vpn_tr = window_sums(vpn_hourly, tp.h)
+    r_cci_tr = window_sums(cci_hourly, tp.h)
     T = r_vpn_tr.shape[0]
 
     def step(carry, rs):

@@ -22,6 +22,13 @@ computation. Mapping back to the paper:
 * §VII-A comparisons (static VPN/CCI, oracle, Figs. 10-12)  ->
   :mod:`repro.fleet.report` renders them per link and fleet-aggregate,
   with toggle-event timelines.
+* §VII-A multi-pair setting ("one CCI lease serves several region pairs")
+  ->  :mod:`repro.fleet.topology` + :func:`engine.plan_topology`: region
+  pairs route onto shared CCI ports at colocation facilities through a
+  traceable one-hot routing matrix; a greedy co-optimizer
+  (:func:`topology.optimize_routing`) packs leases, and ToggleCCI toggles
+  each PORT on its pair-aggregated window costs. The identity routing
+  reproduces ``plan_fleet`` bit-for-bit.
 
 Quick start::
 
@@ -29,13 +36,51 @@ Quick start::
     sc = build_fleet_scenario(128, horizon=8760, seed=0)
     plan = plan_fleet(sc.fleet, sc.demand)          # ONE jit call
     print(build_report(sc, plan).render_text())
+
+    # Multi-pair: shared-port leases over a facility graph.
+    from repro.fleet import build_topology_scenario, optimize_routing
+    from repro.fleet import plan_topology, build_topology_report
+    ts = build_topology_scenario(64, n_facilities=4, seed=0)
+    routing = optimize_routing(ts.topo, ts.demand)
+    tplan = plan_topology(ts.topo, ts.demand, routing=routing)
+    print(build_topology_report(ts, tplan, routing).render_text())
 """
-from .engine import fleet_oracle, plan_fleet, plan_fleet_reference  # noqa: F401
-from .report import FleetReport, LinkReport, build_report, toggle_events  # noqa: F401
+from .engine import (  # noqa: F401
+    fleet_oracle,
+    plan_fleet,
+    plan_fleet_reference,
+    plan_topology,
+    plan_topology_reference,
+    topology_oracle,
+    topology_port_costs_reference,
+)
+from .report import (  # noqa: F401
+    FleetReport,
+    LinkReport,
+    PortReport,
+    TopologyReport,
+    build_report,
+    build_topology_report,
+    toggle_events,
+)
 from .scenario import (  # noqa: F401
     FAMILIES,
     FleetScenario,
+    TopologyScenario,
     build_fleet_scenario,
+    build_topology_scenario,
     link_capacity_gb_hr,
+    port_capacity_gb_hr,
+    vlan_access_gb_hr,
 )
 from .spec import FleetArrays, FleetSpec, LinkSpec, fleet_from_params  # noqa: F401
+from .topology import (  # noqa: F401
+    PairSpec,
+    PortSpec,
+    TopologyArrays,
+    TopologySpec,
+    dedicated_fleet,
+    identity_topology,
+    optimize_routing,
+    routing_matrix,
+)

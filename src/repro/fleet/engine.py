@@ -1,6 +1,6 @@
 """Batched fleet planning: one jitted, vmapped ToggleCCI over N links.
 
-The pipeline, entirely inside ONE jit call:
+The per-link pipeline, entirely inside ONE jit call:
 
   demand (N, T) --clip at per-link capacity--> d
   d --monthly_cumsum + batched tiered tables--> vpn/cci hourly costs (N, T)
@@ -11,15 +11,22 @@ window sums, FSM) is a single XLA program here; planning 100 links x 8760
 hours is one device dispatch (see ``benchmarks/bench_fleet.py`` for the
 link-hours/second numbers).
 
-Precision: the engine runs under ``jax.experimental.enable_x64`` so prefix
+The topology pipeline (:func:`plan_topology`) adds one aggregation stage:
+per-pair demand/VPN costs are folded onto candidate CCI ports through a
+one-hot routing matrix (a traceable operand — re-routing reuses the
+compiled program), and the SAME two-level vmapped scan (ports x hours)
+then toggles each port on its port-aggregated window costs. The identity
+routing collapses this to the per-link pipeline exactly.
+
+Precision: both engines run under ``jax.experimental.enable_x64`` so prefix
 sums over year-long horizons accumulate in float64 — the batched decision
-sequences ``x`` then match the float64 numpy reference
+sequences ``x`` then match the float64 numpy references
 (:func:`repro.core.togglecci.run_togglecci`) bit-for-bit
-(property-tested in ``tests/test_fleet.py``).
+(property-tested in ``tests/test_fleet.py`` / ``tests/test_topology.py``).
 """
 from __future__ import annotations
 
-from typing import Dict, Union
+from typing import Dict, Optional, Sequence, Union
 
 import numpy as np
 
@@ -27,11 +34,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import enable_x64
 
-from repro.core.costmodel import monthly_cumsum, tiered_marginal_cost_tables
+from repro.core.costmodel import (
+    monthly_cumsum,
+    tiered_marginal_cost_np,
+    tiered_marginal_cost_tables,
+)
 from repro.core.togglecci import run_togglecci, run_togglecci_scan
 from repro.kernels.tiered_cost import tiered_cost_batched
 
 from .spec import FleetArrays, FleetSpec
+from .topology import TopologyArrays, TopologySpec, optimize_routing
 
 _JIT_CACHE: dict = {}
 
@@ -140,6 +152,228 @@ def plan_fleet_reference(
         "state": np.stack(states),
         "toggle_cost": np.array(totals),
     }
+
+
+# ---------------------------------------------------------------------------
+# Topology-aware planning: routing + leasing over shared ports
+# ---------------------------------------------------------------------------
+
+
+def _build_topology_plan_fn(hours_per_month: int, renew_in_chunks: bool):
+    def plan(arrays: TopologyArrays, demand: jax.Array) -> Dict[str, jax.Array]:
+        f = jnp.result_type(float)
+        # Pair stage: VLAN-access clip, per-pair tiered VPN counterfactuals.
+        d = jnp.minimum(demand.astype(f), arrays.pair_capacity[:, None])  # (P, T)
+        month_cum = monthly_cumsum(d, hours_per_month)
+        vpn_transfer = tiered_marginal_cost_tables(
+            month_cum, d, arrays.tier_bounds, arrays.tier_rates
+        )
+        vpn_pair = arrays.L_vpn[:, None] + vpn_transfer                   # (P, T)
+
+        # Aggregation stage: fold pairs onto their routed ports. VPN rides
+        # the public internet, so only the CCI volume sees the port's hard
+        # capacity (linksim F1); the lease is paid once, attachments per pair.
+        R = arrays.routing                                                # (M, P)
+        vpn = R @ vpn_pair                                                # (M, T)
+        d_port = jnp.minimum(R @ d, arrays.port_capacity[:, None])        # (M, T)
+        n_pairs = jnp.sum(R, axis=1)                                      # (M,)
+        cci = (
+            arrays.L_cci[:, None]
+            + (arrays.V_cci * n_pairs)[:, None]
+            + arrays.c_cci[:, None] * d_port
+        )
+
+        # Port stage: the SAME two-level scan as plan_fleet, now over ports —
+        # ToggleCCI's window cost trend operates on port-aggregated demand.
+        out = jax.vmap(
+            lambda tp, v, c: run_togglecci_scan(
+                tp, v, c, renew_in_chunks=renew_in_chunks
+            )
+        )(arrays.toggle, vpn, cci)
+
+        T = d.shape[1]
+        cci_live = jnp.arange(T)[None, :] >= arrays.toggle.D[:, None]
+        static_cci = jnp.sum(jnp.where(cci_live, cci, vpn), axis=1)
+        return {
+            "x": out["x"],                     # (M, T) per-port decisions
+            "state": out["state"],             # (M, T) per-port FSM states
+            "toggle_cost": out["total_cost"],  # (M,)
+            "static_vpn": jnp.sum(vpn, axis=1),
+            "static_cci": static_cci,
+            "vpn_hourly": vpn,                 # (M, T) port-aggregated
+            "cci_hourly": cci,
+            "pair_demand": d,                  # (P, T) access-clipped
+            "port_demand": d_port,             # (M, T) CCI-clipped aggregate
+            "n_pairs": n_pairs,                # (M,) attached pairs
+        }
+
+    return plan
+
+
+def plan_topology(
+    topo: Union[TopologySpec, TopologyArrays],
+    demand,
+    *,
+    routing: Optional[Sequence[int]] = None,
+    hours_per_month: int = 730,
+    renew_in_chunks: bool = False,
+) -> Dict[str, jax.Array]:
+    """Co-optimized routing + leasing plan in one jitted program.
+
+    Args:
+      topo: a :class:`TopologySpec` (stacked here under x64) or pre-stacked
+        :class:`TopologyArrays` (then ``routing`` is already baked in).
+      demand: (P, T) hourly GB per region pair.
+      routing: (P,) candidate-port index per pair. ``None`` with a spec runs
+        :func:`repro.fleet.topology.optimize_routing` on the demand first —
+        that is the "co-optimize" entry point.
+    Returns:
+      dict of per-port arrays — see ``_build_topology_plan_fn``.
+    """
+    with enable_x64():
+        if isinstance(topo, TopologySpec):
+            hours_per_month = topo.hours_per_month
+            if routing is None:
+                routing = optimize_routing(topo, np.asarray(demand))
+            arrays = topo.stack(routing, jnp.float64)
+        else:
+            assert routing is None, "pre-stacked arrays already carry a routing"
+            arrays = topo
+        key = ("topology", hours_per_month, renew_in_chunks)
+        fn = _JIT_CACHE.get(key)
+        if fn is None:
+            fn = _JIT_CACHE.setdefault(
+                key, jax.jit(_build_topology_plan_fn(hours_per_month, renew_in_chunks))
+            )
+        return fn(arrays, jnp.asarray(demand, jnp.float64))
+
+
+def _month_cum_np(d: np.ndarray, hours_per_month: int) -> np.ndarray:
+    """Exclusive within-month prefix volume of one (T,) demand row."""
+    T = d.shape[0]
+    t_idx = np.arange(T)
+    month_start = (t_idx // hours_per_month) * hours_per_month
+    full = np.concatenate([[0.0], np.cumsum(d)])
+    return full[:-1] - full[month_start]
+
+
+def topology_port_costs_reference(
+    topo: TopologySpec, demand, routing: Sequence[int]
+) -> Dict[str, np.ndarray]:
+    """Float64 numpy port-aggregated cost series (reference / oracle input).
+
+    Returns ``vpn``/``cci`` (M, T) hourly counterfactuals plus the clipped
+    ``pair_demand``/``port_demand`` — the exact quantities the jitted
+    aggregation stage computes.
+    """
+    r = topo.validate_routing(routing)
+    demand = np.asarray(demand, dtype=np.float64)
+    P, T = demand.shape
+    assert P == topo.n_pairs
+    d = np.minimum(
+        demand, np.array([p.capacity_gb_hr for p in topo.pairs])[:, None]
+    )
+    vpn_pair = np.zeros((P, T))
+    for i, pr in enumerate(topo.pairs):
+        cum = _month_cum_np(d[i], topo.hours_per_month)
+        vpn_pair[i] = pr.L_vpn + tiered_marginal_cost_np(pr.vpn_tier, cum, d[i])
+
+    M = topo.n_ports
+    vpn = np.zeros((M, T))
+    cci = np.zeros((M, T))
+    d_port = np.zeros((M, T))
+    for m, po in enumerate(topo.ports):
+        idx = np.where(r == m)[0]
+        agg = d[idx].sum(axis=0) if idx.size else np.zeros(T)
+        d_port[m] = np.minimum(agg, po.capacity_gb_hr)
+        vpn[m] = vpn_pair[idx].sum(axis=0) if idx.size else 0.0
+        cci[m] = po.L_cci + po.V_cci * idx.size + po.c_cci * d_port[m]
+    return {"vpn": vpn, "cci": cci, "pair_demand": d, "port_demand": d_port}
+
+
+def plan_topology_reference(
+    topo: TopologySpec,
+    demand,
+    routing: Sequence[int],
+    *,
+    renew_in_chunks: bool = False,
+    port_costs: Optional[Dict[str, np.ndarray]] = None,
+) -> Dict[str, np.ndarray]:
+    """Per-port pure-Python reference (test oracle for :func:`plan_topology`).
+
+    Aggregates pair costs onto ports in float64 numpy and runs the paper's
+    reference FSM (:func:`repro.core.togglecci.run_togglecci`) port by port
+    on the aggregated series.
+
+    Exactness contract: the FSM is bit-exact GIVEN identical (M, T) port
+    cost series. The independent numpy aggregation here reproduces the
+    engine's matmul aggregation only to float64 ulp (summation order over
+    routed pairs differs), so decisions agree bit-for-bit unless a window
+    sum straddles a θ threshold within ~1e-15 relative — pass
+    ``port_costs={"vpn": ..., "cci": ...}`` (e.g. the engine's own hourly
+    outputs) to pin the series and assert the FSM property exactly; see
+    ``benchmarks/bench_topology.py`` for the two-part verification.
+    """
+    from repro.core.costmodel import HourlyCosts
+
+    series = (
+        port_costs
+        if port_costs is not None
+        else topology_port_costs_reference(topo, demand, routing)
+    )
+    T = series["vpn"].shape[1]
+    zeros = np.zeros(T)
+    xs, states, totals = [], [], []
+    for m, po in enumerate(topo.ports):
+        costs = HourlyCosts(
+            vpn_lease=zeros,
+            vpn_transfer=series["vpn"][m],
+            cci_lease=zeros,
+            cci_transfer=series["cci"][m],
+        )
+        res = run_togglecci(
+            po.toggle_cost_params(topo.hours_per_month),
+            None,
+            costs=costs,
+            renew_in_chunks=renew_in_chunks,
+        )
+        xs.append(res.x)
+        states.append(res.state)
+        totals.append(res.total_cost)
+    return {
+        "x": np.stack(xs),
+        "state": np.stack(states),
+        "toggle_cost": np.array(totals),
+        "vpn_hourly": series["vpn"],
+        "cci_hourly": series["cci"],
+    }
+
+
+def topology_oracle(
+    topo: TopologySpec, demand, routing: Sequence[int]
+) -> np.ndarray:
+    """Offline-optimal (DP) cost per port for a FIXED routing — the report's
+    leasing-oracle column (routing itself is not oracle-optimized)."""
+    from repro.core.costmodel import HourlyCosts
+    from repro.core.oracle import offline_optimal
+
+    series = topology_port_costs_reference(topo, demand, routing)
+    T = series["vpn"].shape[1]
+    zeros = np.zeros(T)
+    out = []
+    for m, po in enumerate(topo.ports):
+        costs = HourlyCosts(
+            vpn_lease=zeros,
+            vpn_transfer=series["vpn"][m],
+            cci_lease=zeros,
+            cci_transfer=series["cci"][m],
+        )
+        out.append(
+            offline_optimal(
+                po.toggle_cost_params(topo.hours_per_month), costs=costs
+            ).total_cost
+        )
+    return np.array(out)
 
 
 def fleet_oracle(fleet: FleetSpec, demand) -> np.ndarray:

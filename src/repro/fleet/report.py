@@ -4,19 +4,32 @@ Consumes the arrays from :func:`repro.fleet.engine.plan_fleet` and renders
 the paper's single-link comparisons (ToggleCCI vs static-VPN / static-CCI /
 offline oracle, Figs. 10-12) at portfolio scale: one row per link, one
 aggregate line, and toggle-event timelines per link.
+
+The topology report (:func:`build_topology_report`) adds the two §VII-A
+portfolio metrics PR-1 could not express:
+
+* **lease-sharing savings** — the same routed (pair, port) choices priced
+  per-link (every pair paying its full ``L_cci``) vs shared; and
+* **oracle gap** — per-port ToggleCCI vs the offline DP on the same
+  port-aggregated cost series (routing held fixed).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.togglecci import OFF, ON
 
-from .engine import fleet_oracle
-from .scenario import FleetScenario
+from .engine import (
+    fleet_oracle,
+    plan_fleet,
+    topology_oracle,
+)
+from .scenario import FleetScenario, TopologyScenario
 from .spec import FleetSpec
+from .topology import dedicated_fleet
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,3 +164,175 @@ def build_report(
             )
         )
     return FleetReport(links=tuple(rows), horizon=T)
+
+
+# ---------------------------------------------------------------------------
+# Topology report: shared-port economics
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PortReport:
+    """One CCI port's planned economics (aggregated over attached pairs)."""
+
+    name: str
+    facility: str
+    n_pairs: int
+    toggle_cost: float
+    static_vpn: float
+    static_cci: float
+    oracle_cost: Optional[float]
+    on_fraction: float
+    requests: Tuple[int, ...]
+    releases: Tuple[int, ...]
+
+    @property
+    def best_static(self) -> float:
+        return min(self.static_vpn, self.static_cci)
+
+    @property
+    def savings_vs_best_static(self) -> float:
+        return 1.0 - self.toggle_cost / self.best_static if self.best_static else 0.0
+
+    @property
+    def competitive_ratio(self) -> Optional[float]:
+        if self.oracle_cost is None or self.oracle_cost <= 0:
+            return None
+        return self.toggle_cost / self.oracle_cost
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologyReport:
+    ports: Tuple[PortReport, ...]
+    horizon: int
+    routing: Tuple[int, ...]
+    dedicated_cost: Optional[float]  # same routing, no lease sharing (PR-1 view)
+
+    @property
+    def totals(self) -> Dict[str, float]:
+        # Static comparators count ROUTED ports only: an idle candidate port
+        # still has static_cci = a full-horizon lease nobody would buy, and
+        # summing it would flatter ToggleCCI vs the static-CCI baseline.
+        used = [p for p in self.ports if p.n_pairs > 0]
+        agg = {
+            "togglecci": sum(p.toggle_cost for p in self.ports),
+            "static_vpn": sum(p.static_vpn for p in used),
+            "static_cci": sum(p.static_cci for p in used),
+            "best_static_per_port": sum(p.best_static for p in used),
+        }
+        oracles = [p.oracle_cost for p in self.ports if p.oracle_cost is not None]
+        if oracles and len(oracles) == len(self.ports):
+            agg["oracle"] = sum(oracles)
+            agg["oracle_gap"] = (
+                agg["togglecci"] / agg["oracle"] if agg["oracle"] > 0 else float("nan")
+            )
+        if self.dedicated_cost is not None:
+            agg["dedicated_per_link"] = self.dedicated_cost
+            agg["lease_sharing_savings"] = (
+                1.0 - agg["togglecci"] / self.dedicated_cost
+                if self.dedicated_cost
+                else 0.0
+            )
+        return agg
+
+    @property
+    def ports_used(self) -> int:
+        """Ports with at least one routed pair."""
+        return sum(1 for p in self.ports if p.n_pairs > 0)
+
+    def render_text(self, max_rows: int = 20) -> str:
+        hdr = (
+            f"{'port':<20}{'facility':<10}{'pairs':>6}{'toggle $':>12}"
+            f"{'vpn $':>12}{'cci $':>12}{'save%':>8}{'on%':>6}{'tog':>5}"
+        )
+        lines = [hdr, "-" * len(hdr)]
+        for p in self.ports[:max_rows]:
+            lines.append(
+                f"{p.name:<20}{p.facility:<10}{p.n_pairs:>6d}"
+                f"{p.toggle_cost:>12.0f}{p.static_vpn:>12.0f}"
+                f"{p.static_cci:>12.0f}"
+                f"{100 * p.savings_vs_best_static:>7.1f}%"
+                f"{100 * p.on_fraction:>5.0f}%"
+                f"{len(p.requests) + len(p.releases):>5d}"
+            )
+        if len(self.ports) > max_rows:
+            lines.append(f"... ({len(self.ports) - max_rows} more ports)")
+        t = self.totals
+        lines.append("-" * len(hdr))
+        tail = (
+            f"topology total: toggle ${t['togglecci']:.0f}  "
+            f"vpn ${t['static_vpn']:.0f}  cci ${t['static_cci']:.0f}  "
+            f"ports used {self.ports_used}/{len(self.ports)}"
+        )
+        if "lease_sharing_savings" in t:
+            tail += (
+                f"  vs per-link ${t['dedicated_per_link']:.0f} "
+                f"({100 * t['lease_sharing_savings']:+.1f}% shared-lease saving)"
+            )
+        if "oracle_gap" in t:
+            tail += f"  oracle gap {t['oracle_gap']:.3f}x"
+        lines.append(tail)
+        return "\n".join(lines)
+
+
+def build_topology_report(
+    scenario: TopologyScenario,
+    plan: Dict[str, np.ndarray],
+    routing: Sequence[int],
+    *,
+    include_oracle: bool = False,
+    include_dedicated_baseline: bool = True,
+    renew_in_chunks: bool = False,
+) -> TopologyReport:
+    """Assemble a :class:`TopologyReport` from :func:`plan_topology` outputs.
+
+    ``include_dedicated_baseline`` replans the SAME routed (pair, port)
+    choices with the PR-1 per-link engine — every pair paying its full port
+    lease — so ``lease_sharing_savings`` isolates exactly what sharing buys.
+    ``include_oracle`` runs the per-port offline DP on the port-aggregated
+    cost series (numpy, off the hot path).
+    """
+    topo = scenario.topo
+    r = topo.validate_routing(routing)
+    state = np.asarray(plan["state"])
+    x = np.asarray(plan["x"])
+    toggle_cost = np.asarray(plan["toggle_cost"], dtype=np.float64)
+    static_vpn = np.asarray(plan["static_vpn"], dtype=np.float64)
+    static_cci = np.asarray(plan["static_cci"], dtype=np.float64)
+    n_pairs = np.asarray(plan["n_pairs"]).astype(np.int64)
+    T = state.shape[1]
+
+    oracle = topology_oracle(topo, scenario.demand, r) if include_oracle else None
+
+    dedicated_cost = None
+    if include_dedicated_baseline:
+        ded = plan_fleet(
+            dedicated_fleet(topo, r),
+            scenario.demand,
+            renew_in_chunks=renew_in_chunks,
+        )
+        dedicated_cost = float(np.sum(np.asarray(ded["toggle_cost"])))
+
+    rows: List[PortReport] = []
+    for m, po in enumerate(topo.ports):
+        requests, releases = toggle_events(state[m])
+        rows.append(
+            PortReport(
+                name=po.name,
+                facility=po.facility,
+                n_pairs=int(n_pairs[m]),
+                toggle_cost=float(toggle_cost[m]),
+                static_vpn=float(static_vpn[m]),
+                static_cci=float(static_cci[m]),
+                oracle_cost=float(oracle[m]) if oracle is not None else None,
+                on_fraction=float(np.mean(x[m])),
+                requests=requests,
+                releases=releases,
+            )
+        )
+    return TopologyReport(
+        ports=tuple(rows),
+        horizon=T,
+        routing=tuple(int(v) for v in r),
+        dedicated_cost=dedicated_cost,
+    )

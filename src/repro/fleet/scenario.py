@@ -34,6 +34,7 @@ from repro.traffic.puffer import puffer_trace
 from repro.traffic.traces import bursty_trace, constant_trace
 
 from .spec import FleetSpec, LinkSpec
+from .topology import PairSpec, PortSpec, TopologySpec
 
 GB_PER_GBPS_HOUR = 450.0  # 1 Gbps sustained for one hour = 450 GB
 
@@ -66,9 +67,19 @@ def link_capacity_gb_hr(vlan_gbps: int) -> float:
     """Physical ceiling of one link's demand path (linksim findings F1/F3):
     the VLAN bursts elastically up to +70% of nominal but the CCI link is a
     hard cap at nominal minus L2+L4 overhead."""
-    vlan_cap = vlan_gbps * linksim.VLAN_BURST_FACTOR
-    cci_cap = linksim.CCI_NOMINAL_GBPS * (1.0 - linksim.CCI_OVERHEAD)
+    vlan_cap = linksim.vlan_access_capacity_gbps(vlan_gbps)
+    cci_cap = linksim.cci_port_capacity_gbps()
     return min(vlan_cap, cci_cap) * GB_PER_GBPS_HOUR
+
+
+def port_capacity_gb_hr(nominal_gbps: float = linksim.CCI_NOMINAL_GBPS) -> float:
+    """Hard CCI ceiling of one shared colocation port (GB/hour, finding F1)."""
+    return linksim.cci_port_capacity_gbps(nominal_gbps) * GB_PER_GBPS_HOUR
+
+
+def vlan_access_gb_hr(vlan_gbps: int) -> float:
+    """Elastic VLAN-attachment access ceiling of one pair (GB/hour, F3)."""
+    return linksim.vlan_access_capacity_gbps(vlan_gbps) * GB_PER_GBPS_HOUR
 
 
 def _sample_params(rng: np.random.Generator) -> Tuple[CostParams, int]:
@@ -177,5 +188,178 @@ def build_fleet_scenario(
     return FleetScenario(
         fleet=FleetSpec(tuple(links)),
         demand=np.stack(cols),  # (N, T)
+        horizon=horizon,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Multi-pair topology scenarios (paper §VII-A: pairs sharing CCI ports)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologyScenario:
+    """A port/facility topology plus its (P, T) per-pair demand matrix."""
+
+    topo: TopologySpec
+    demand: np.ndarray          # (P, T) GB/hour per region pair
+    horizon: int
+
+    @property
+    def n_pairs(self) -> int:
+        return self.topo.n_pairs
+
+    @property
+    def n_ports(self) -> int:
+        return self.topo.n_ports
+
+    def summary(self) -> Dict[str, int]:
+        by_family: Dict[str, int] = {}
+        for pr in self.topo.pairs:
+            by_family[pr.family] = by_family.get(pr.family, 0) + 1
+        return by_family
+
+
+def _sample_port(
+    rng: np.random.Generator, name: str, facility: str, cloud: str
+) -> PortSpec:
+    """One candidate CCI port: catalog pricing + a sampled toggle point."""
+    from repro.core.pricing import AWS_DX_PORT_100G_HR, GCP_CCI_PORT_100G_HR
+
+    vlan = int(_VLAN_CHOICES[rng.integers(len(_VLAN_CHOICES))])
+    base = make_scenario(
+        "gcp", cloud, colocation_far=bool(rng.random() < 0.2), vlan_gbps=vlan
+    )
+    # A quarter of AWS-side facilities offer a 100G port: 8x the lease for
+    # 10x the hard capacity — the sharing-friendly choice for hot facilities.
+    if cloud == "aws" and rng.random() < 0.25:
+        L_cci, cap = GCP_CCI_PORT_100G_HR + AWS_DX_PORT_100G_HR, port_capacity_gb_hr(100.0)
+    else:
+        L_cci, cap = base.L_cci, port_capacity_gb_hr()
+    return PortSpec(
+        name=name,
+        facility=facility,
+        cloud=cloud,
+        L_cci=L_cci,
+        V_cci=base.V_cci,
+        c_cci=base.c_cci,
+        capacity_gb_hr=cap,
+        D=int(rng.integers(24, 97)),
+        T_cci=int(rng.integers(72, 337)),
+        h=int(rng.integers(72, 337)),
+        theta1=float(rng.uniform(0.85, 0.95)),
+        theta2=float(rng.uniform(1.05, 1.2)),
+    )
+
+
+def build_topology_scenario(
+    n_pairs: int,
+    *,
+    n_facilities: int = 3,
+    ports_per_facility: int = 2,
+    reach: int = 2,
+    horizon: int = 8760,
+    seed: int = 0,
+    families: Sequence[str] = FAMILIES,
+    demand_scale: float = 1.0,
+) -> TopologyScenario:
+    """Sample a multi-pair topology: facilities -> candidate ports -> pairs.
+
+    Facilities alternate the non-GCP cloud they host (AWS/Azure) and expose
+    ``ports_per_facility`` candidate CCI ports each (10G catalog pricing,
+    occasionally 100G). Every region pair can reach the ports of up to
+    ``reach`` facilities on its cloud pair — the candidate set
+    :func:`repro.fleet.topology.optimize_routing` packs leases over. Demand
+    reuses the four trace families of :func:`build_fleet_scenario`, scaled
+    per pair against the breakeven rate of its first candidate port ridden
+    ALONE (so sharing strictly improves on the per-link economics).
+    """
+    assert n_pairs >= 1 and n_facilities >= 1 and ports_per_facility >= 1
+    assert horizon >= 24 and reach >= 1
+    rng = np.random.default_rng(seed)
+    families = tuple(families)
+    fam_of = [families[i % len(families)] for i in range(n_pairs)]
+
+    clouds = ("aws", "azure") if n_facilities >= 2 else ("aws",)
+    ports = []
+    for j in range(n_facilities):
+        fac = f"fac{j:02d}"
+        cloud = clouds[j % len(clouds)]
+        for k in range(ports_per_facility):
+            ports.append(
+                _sample_port(rng, f"{fac}-{cloud}-p{k}", fac, cloud)
+            )
+    by_cloud = {
+        c: [j for j, po in enumerate(ports) if po.cloud == c] for c in clouds
+    }
+
+    group_cols = {
+        fam: _family_columns(fam, fam_of.count(fam), horizon, rng)
+        for fam in families
+    }
+    taken = {fam: 0 for fam in families}
+
+    pairs, cols = [], []
+    for i in range(n_pairs):
+        fam = fam_of[i]
+        src, dst = _CLOUD_PAIRS[rng.integers(len(_CLOUD_PAIRS))]
+        other = dst if src == "gcp" else src
+        if other not in by_cloud:
+            other = clouds[0]
+            src, dst = ("gcp", other) if src == "gcp" else (other, "gcp")
+        vlan = int(_VLAN_CHOICES[rng.integers(len(_VLAN_CHOICES))])
+        params = make_scenario(
+            src,
+            dst,
+            intercontinental=bool(rng.random() < 0.25),
+            vlan_gbps=vlan,
+            gcp_tier="premium" if rng.random() < 0.7 else "standard",
+        )
+        # Candidate ports: every port at <= `reach` facilities of the
+        # pair's cloud (region pairs only meet at facilities both clouds
+        # populate — the facility-graph edge set).
+        facs = sorted({ports[j].facility for j in by_cloud[other]})
+        n_reach = min(reach, len(facs))
+        chosen = set(
+            np.array(facs)[rng.permutation(len(facs))[:n_reach]].tolist()
+        )
+        candidates = tuple(
+            j for j in by_cloud[other] if ports[j].facility in chosen
+        )
+        pairs.append(
+            PairSpec(
+                name=f"{fam}-{i:03d}",
+                src=src,
+                dst=dst,
+                L_vpn=params.L_vpn,
+                vpn_tier=params.vpn_tier,
+                capacity_gb_hr=vlan_access_gb_hr(vlan),
+                candidates=candidates,
+                family=fam,
+            )
+        )
+
+        col = group_cols[fam][:, taken[fam]]
+        taken[fam] += 1
+        po = ports[candidates[0]]
+        solo = CostParams(
+            L_cci=po.L_cci,
+            V_cci=po.V_cci,
+            c_cci=po.c_cci,
+            L_vpn=params.L_vpn,
+            vpn_tier=params.vpn_tier,
+        )
+        target = (
+            breakeven_rate_gb_per_hour(solo)
+            * demand_scale
+            * float(rng.lognormal(0.0, 0.7))
+        )
+        mean = col.mean()
+        col = col * (target / mean) if mean > 0 else np.full(horizon, target)
+        cols.append(col)
+
+    return TopologyScenario(
+        topo=TopologySpec(ports=tuple(ports), pairs=tuple(pairs)),
+        demand=np.stack(cols),  # (P, T)
         horizon=horizon,
     )

@@ -17,15 +17,36 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import NamedTuple, Sequence, Tuple
+from typing import List, NamedTuple, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.pricing import CostParams
+from repro.core.pricing import CostParams, TieredRate
 from repro.core.togglecci import ToggleParams
 
 PAD_BOUND = 1e30  # stands in for inf (traceable-finite)
+
+
+def pad_tier_tables(
+    tiers: Sequence[TieredRate],
+) -> Tuple[List[List[float]], List[List[float]]]:
+    """Pad ragged tier tables to the common max depth K.
+
+    Shared by the fleet and topology stackers: padding rows are
+    ``(bound=PAD_BOUND, rate=0)`` — duplicate bounds make zero-width
+    segments, so padding is cost-neutral (the invariant
+    :func:`repro.core.costmodel.tiered_marginal_cost_tables` relies on).
+    Returns ``(bounds, rates)`` as (len(tiers), K) nested lists.
+    """
+    K = max(len(t.bounds_gb) for t in tiers)
+    bounds, rates = [], []
+    for t in tiers:
+        b = [x if math.isfinite(x) else PAD_BOUND for x in t.bounds_gb]
+        r = list(t.rates)
+        bounds.append(b + [PAD_BOUND] * (K - len(b)))
+        rates.append(r + [0.0] * (K - len(r)))
+    return bounds, rates
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,16 +112,7 @@ class FleetSpec:
         """Stack link parameters into :class:`FleetArrays` (SoA pytree)."""
         f = dtype or jnp.result_type(float)
         ps = [l.params for l in self.links]
-        K = max(len(p.vpn_tier.bounds_gb) for p in ps)
-
-        def pad_tier(p: CostParams):
-            b = [x if math.isfinite(x) else PAD_BOUND for x in p.vpn_tier.bounds_gb]
-            r = list(p.vpn_tier.rates)
-            b += [PAD_BOUND] * (K - len(b))
-            r += [0.0] * (K - len(r))
-            return b, r
-
-        tiers = [pad_tier(p) for p in ps]
+        bounds, rates = pad_tier_tables([p.vpn_tier for p in ps])
         cap = [
             l.capacity_gb_hr if math.isfinite(l.capacity_gb_hr) else PAD_BOUND
             for l in self.links
@@ -117,8 +129,8 @@ class FleetSpec:
             V_cci=jnp.asarray([p.V_cci for p in ps], f),
             c_cci=jnp.asarray([p.c_cci for p in ps], f),
             L_vpn=jnp.asarray([p.L_vpn for p in ps], f),
-            tier_bounds=jnp.asarray([t[0] for t in tiers], f),
-            tier_rates=jnp.asarray([t[1] for t in tiers], f),
+            tier_bounds=jnp.asarray(bounds, f),
+            tier_rates=jnp.asarray(rates, f),
             toggle=toggle,
             capacity=jnp.asarray(cap, f),
         )

@@ -1,0 +1,390 @@
+"""Port/facility topology: shared CCI leases over a facility graph (§VII-A).
+
+PR-1's fleet model prices each region pair as an isolated *link* carrying its
+own CCI port lease. The paper's multi-pair setting (§VII-A, Eq. 2) is richer:
+a CCI lease is a pair of physical ports at ONE colocation facility, and every
+region pair whose clouds meet at that facility can attach a VLAN to it — the
+``L_CCI`` lease is paid once and shared, only the ``V_CCI`` attachment is
+per-pair. Planning therefore has two coupled decisions:
+
+* **routing** — which candidate port serves each region pair;
+* **leasing**  — when each port's ToggleCCI keeps the lease active.
+
+This module holds the data model and the routing heuristic:
+
+* :class:`PortSpec`   — one candidate CCI port (facility, pricing, toggle
+  operating point, linksim-calibrated hard capacity);
+* :class:`PairSpec`   — one region pair (VPN pricing, VLAN access ceiling,
+  candidate port indices);
+* :class:`TopologySpec` / :class:`TopologyArrays` — the spec and its
+  struct-of-arrays view; the pair→port assignment becomes a padded one-hot
+  ``(M, P)`` routing matrix that is a *traceable operand* of the jitted
+  engine (:func:`repro.fleet.engine.plan_topology`), so re-routing never
+  recompiles;
+* :func:`optimize_routing` — greedy lease-sharing co-optimization (the exact
+  problem is facility location, NP-hard; first-fit-decreasing on expected
+  demand with incremental-cost scoring is the classic 1.5-ish heuristic);
+* :func:`identity_topology` / :func:`dedicated_fleet` — bridges to the PR-1
+  per-link planner: the identity routing reproduces ``plan_fleet``
+  bit-for-bit (property-tested), and the dedicated view prices the same
+  routing WITHOUT lease sharing, which is the report's savings baseline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pricing import HOURS_PER_MONTH, CostParams, TieredRate, flat_rate
+from repro.core.togglecci import ToggleParams
+
+from .spec import PAD_BOUND, FleetSpec, LinkSpec, pad_tier_tables
+
+
+@dataclasses.dataclass(frozen=True)
+class PortSpec:
+    """One candidate CCI port pair at a colocation facility.
+
+    ``L_cci`` is the shared hourly lease (both physical ports), paid once
+    however many pairs attach; ``V_cci`` is the per-pair VLAN attachment;
+    ``c_cci`` the flat per-GB rate of the dedicated link. The toggle fields
+    are this port's ToggleCCI operating point — the FSM decides per *port*,
+    driven by port-aggregated window costs.
+    """
+
+    name: str
+    facility: str
+    cloud: str                        # non-GCP side of the cross-connect
+    L_cci: float                      # $/hr shared lease
+    V_cci: float                      # $/hr per attached pair
+    c_cci: float                      # $/GB flat transfer
+    capacity_gb_hr: float = math.inf  # hard CCI ceiling (linksim F1)
+    D: int = 72                       # provisioning delay, hours
+    T_cci: int = 168                  # minimum commitment, hours
+    h: int = 168                      # sliding window, hours
+    theta1: float = 0.9
+    theta2: float = 1.1
+
+    def __post_init__(self) -> None:
+        assert self.capacity_gb_hr > 0
+        assert self.D >= 0 and self.T_cci >= 1 and self.h >= 1
+        assert 0 < self.theta1 <= self.theta2
+
+    def toggle_cost_params(
+        self, hours_per_month: int = HOURS_PER_MONTH
+    ) -> CostParams:
+        """This port's FSM/pricing constants as a :class:`CostParams`.
+
+        The VPN side is zeroed — callers (reference planner, oracle) supply
+        precomputed port-aggregated cost series instead of deriving them
+        from these params.
+        """
+        return CostParams(
+            L_cci=self.L_cci,
+            V_cci=self.V_cci,
+            c_cci=self.c_cci,
+            L_vpn=0.0,
+            vpn_tier=flat_rate(0.0),
+            D=self.D,
+            T_cci=self.T_cci,
+            h=self.h,
+            theta1=self.theta1,
+            theta2=self.theta2,
+            hours_per_month=hours_per_month,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class PairSpec:
+    """One region pair: demand source, VPN pricing, candidate ports."""
+
+    name: str
+    src: str
+    dst: str
+    L_vpn: float                      # $/hr tunnel lease (both ends)
+    vpn_tier: TieredRate              # tiered $/GB internet egress
+    capacity_gb_hr: float = math.inf  # VLAN access ceiling (linksim F3)
+    candidates: Tuple[int, ...] = ()  # indices into TopologySpec.ports
+    family: str = "constant"          # demand-trace family (metadata)
+
+    def __post_init__(self) -> None:
+        assert self.capacity_gb_hr > 0
+        assert len(self.candidates) >= 1, f"pair {self.name} has no candidate port"
+
+
+class TopologyArrays(NamedTuple):
+    """Struct-of-arrays view of a topology — the jitted engine's operands.
+
+    Port fields are (M,)/(M-leading); pair fields (P,)/(P, K). ``routing``
+    is the padded one-hot pair→port matrix ``R`` with ``R[m, p] = 1`` iff
+    pair ``p`` rides port ``m`` — a plain float operand, so the SAME
+    compiled program evaluates any routing of the same (M, P, K, T) shape.
+    """
+
+    L_cci: jax.Array          # (M,) shared port lease $/hr
+    V_cci: jax.Array          # (M,) per-pair attachment $/hr
+    c_cci: jax.Array          # (M,) flat CCI $/GB
+    port_capacity: jax.Array  # (M,) hard CCI ceiling GB/hr (PAD_BOUND = inf)
+    toggle: ToggleParams      # fields (M,): per-port FSM operating points
+    L_vpn: jax.Array          # (P,) per-pair VPN lease $/hr
+    tier_bounds: jax.Array    # (P, K) padded cumulative-volume bounds
+    tier_rates: jax.Array     # (P, K) marginal $/GB (0 on padding)
+    pair_capacity: jax.Array  # (P,) VLAN access ceiling GB/hr
+    routing: jax.Array        # (M, P) one-hot pair->port assignment
+
+    @property
+    def n_ports(self) -> int:
+        return self.L_cci.shape[0]
+
+    @property
+    def n_pairs(self) -> int:
+        return self.L_vpn.shape[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologySpec:
+    """Candidate ports + region pairs sharing one billing calendar."""
+
+    ports: Tuple[PortSpec, ...]
+    pairs: Tuple[PairSpec, ...]
+    hours_per_month: int = HOURS_PER_MONTH
+
+    def __post_init__(self) -> None:
+        assert len(self.ports) >= 1 and len(self.pairs) >= 1
+        m = len(self.ports)
+        for pr in self.pairs:
+            assert all(0 <= c < m for c in pr.candidates), (
+                f"pair {pr.name}: candidate index out of range [0, {m})"
+            )
+
+    @property
+    def n_ports(self) -> int:
+        return len(self.ports)
+
+    @property
+    def n_pairs(self) -> int:
+        return len(self.pairs)
+
+    @property
+    def facilities(self) -> Tuple[str, ...]:
+        seen: dict = {}
+        for p in self.ports:
+            seen.setdefault(p.facility, None)
+        return tuple(seen)
+
+    def candidate_matrix(self) -> np.ndarray:
+        """(P, M) bool — which ports each pair may route through."""
+        mask = np.zeros((self.n_pairs, self.n_ports), dtype=bool)
+        for i, pr in enumerate(self.pairs):
+            mask[i, list(pr.candidates)] = True
+        return mask
+
+    def validate_routing(self, routing: Sequence[int]) -> np.ndarray:
+        r = np.asarray(routing, dtype=np.int64)
+        assert r.shape == (self.n_pairs,), (
+            f"routing must be ({self.n_pairs},), got {r.shape}"
+        )
+        for i, (pr, m) in enumerate(zip(self.pairs, r)):
+            assert int(m) in pr.candidates, (
+                f"pair {pr.name} routed to non-candidate port {int(m)}"
+            )
+        return r
+
+    def stack(self, routing: Sequence[int], dtype=None) -> TopologyArrays:
+        """Stack the spec + a concrete routing into :class:`TopologyArrays`."""
+        f = dtype or jnp.result_type(float)
+        r = self.validate_routing(routing)
+        bounds, rates = pad_tier_tables([pr.vpn_tier for pr in self.pairs])
+        fin = lambda v: v if math.isfinite(v) else PAD_BOUND
+        toggle = ToggleParams(
+            theta1=jnp.asarray([p.theta1 for p in self.ports], f),
+            theta2=jnp.asarray([p.theta2 for p in self.ports], f),
+            h=jnp.asarray([p.h for p in self.ports], jnp.int32),
+            D=jnp.asarray([p.D for p in self.ports], jnp.int32),
+            T_cci=jnp.asarray([p.T_cci for p in self.ports], jnp.int32),
+        )
+        return TopologyArrays(
+            L_cci=jnp.asarray([p.L_cci for p in self.ports], f),
+            V_cci=jnp.asarray([p.V_cci for p in self.ports], f),
+            c_cci=jnp.asarray([p.c_cci for p in self.ports], f),
+            port_capacity=jnp.asarray(
+                [fin(p.capacity_gb_hr) for p in self.ports], f
+            ),
+            toggle=toggle,
+            L_vpn=jnp.asarray([pr.L_vpn for pr in self.pairs], f),
+            tier_bounds=jnp.asarray(bounds, f),
+            tier_rates=jnp.asarray(rates, f),
+            pair_capacity=jnp.asarray(
+                [fin(pr.capacity_gb_hr) for pr in self.pairs], f
+            ),
+            routing=routing_matrix(r, self.n_ports, f),
+        )
+
+    def combined_params(self, pair_idx: int, port_idx: int) -> CostParams:
+        """CostParams of pair ``pair_idx`` riding port ``port_idx`` ALONE —
+        exactly the PR-1 per-link view of that (pair, port) choice."""
+        pr, po = self.pairs[pair_idx], self.ports[port_idx]
+        return CostParams(
+            L_cci=po.L_cci,
+            V_cci=po.V_cci,
+            c_cci=po.c_cci,
+            L_vpn=pr.L_vpn,
+            vpn_tier=pr.vpn_tier,
+            D=po.D,
+            T_cci=po.T_cci,
+            h=po.h,
+            theta1=po.theta1,
+            theta2=po.theta2,
+            hours_per_month=self.hours_per_month,
+        )
+
+
+def routing_matrix(routing: np.ndarray, n_ports: int, dtype=None) -> jax.Array:
+    """(P,) port indices -> padded one-hot (M, P) float routing matrix."""
+    f = dtype or jnp.result_type(float)
+    r = np.asarray(routing, dtype=np.int64)
+    R = np.zeros((n_ports, r.shape[0]))
+    R[r, np.arange(r.shape[0])] = 1.0
+    return jnp.asarray(R, f)
+
+
+# ---------------------------------------------------------------------------
+# Routing optimization (the "co-optimize routing + leasing" heuristic)
+# ---------------------------------------------------------------------------
+
+
+def optimize_routing(
+    topo: TopologySpec,
+    demand: Optional[np.ndarray] = None,
+    *,
+    mean_demand: Optional[np.ndarray] = None,
+    headroom: float = 0.8,
+) -> np.ndarray:
+    """Greedy lease-sharing routing: first-fit decreasing with incremental
+    hourly-cost scoring.
+
+    Pairs are placed in decreasing order of mean demand. Each pair picks the
+    candidate port minimizing its *incremental* steady-state hourly cost
+
+        (L_cci  if the port is not opened yet else 0) + V_cci + c_cci * mean,
+
+    i.e. already-opened ports look ``L_cci`` cheaper — that is the lease
+    sharing the per-link planner cannot see. A port only accepts a pair while
+    its mean load stays under ``headroom`` x capacity; when no candidate has
+    room, the pair falls back to its least-loaded candidate (ToggleCCI will
+    keep such an overloaded port on VPN more of the time anyway).
+
+    The exact joint problem is uncapacitated-facility-location-hard; this
+    one-pass heuristic is the standard practical compromise and is evaluated
+    against the dedicated per-pair baseline by the topology report.
+    """
+    assert demand is not None or mean_demand is not None
+    if mean_demand is None:
+        d = np.asarray(demand, dtype=np.float64)
+        assert d.shape[0] == topo.n_pairs
+        d = np.minimum(d, np.array([p.capacity_gb_hr for p in topo.pairs])[:, None])
+        mean_demand = d.mean(axis=1)
+    mean = np.asarray(mean_demand, dtype=np.float64)
+    assert mean.shape == (topo.n_pairs,)
+
+    load = np.zeros(topo.n_ports)
+    opened = np.zeros(topo.n_ports, dtype=bool)
+    routing = np.zeros(topo.n_pairs, dtype=np.int64)
+    cap = np.array([p.capacity_gb_hr for p in topo.ports])
+
+    for i in np.argsort(-mean):
+        pr = topo.pairs[i]
+        best, best_cost = None, np.inf
+        for m in pr.candidates:
+            po = topo.ports[m]
+            if load[m] + mean[i] > headroom * cap[m]:
+                continue
+            incr = (0.0 if opened[m] else po.L_cci) + po.V_cci + po.c_cci * mean[i]
+            if incr < best_cost:
+                best, best_cost = m, incr
+        if best is None:  # every candidate full: least relative load wins
+            best = min(pr.candidates, key=lambda m: load[m] / cap[m])
+        routing[i] = best
+        load[best] += mean[i]
+        opened[best] = True
+    return routing
+
+
+# ---------------------------------------------------------------------------
+# Bridges to the PR-1 per-link planner
+# ---------------------------------------------------------------------------
+
+
+def identity_topology(fleet: FleetSpec) -> Tuple[TopologySpec, np.ndarray]:
+    """Degenerate topology: one private port per PR-1 link, identity routing.
+
+    Port capacity is left unbounded so the only demand clip is the pair's
+    (= the link's) — :func:`repro.fleet.engine.plan_topology` on this
+    topology reproduces :func:`repro.fleet.engine.plan_fleet` bit-for-bit
+    (the property test in ``tests/test_topology.py``).
+    """
+    ports, pairs = [], []
+    for i, link in enumerate(fleet.links):
+        p = link.params
+        ports.append(
+            PortSpec(
+                name=f"port-{link.name}",
+                facility=f"fac-{i:03d}",
+                cloud="aws",
+                L_cci=p.L_cci,
+                V_cci=p.V_cci,
+                c_cci=p.c_cci,
+                D=p.D,
+                T_cci=p.T_cci,
+                h=p.h,
+                theta1=p.theta1,
+                theta2=p.theta2,
+            )
+        )
+        pairs.append(
+            PairSpec(
+                name=link.name,
+                src="gcp",
+                dst="aws",
+                L_vpn=p.L_vpn,
+                vpn_tier=p.vpn_tier,
+                capacity_gb_hr=link.capacity_gb_hr,
+                candidates=(i,),
+                family=link.family,
+            )
+        )
+    topo = TopologySpec(
+        ports=tuple(ports),
+        pairs=tuple(pairs),
+        hours_per_month=fleet.hours_per_month,
+    )
+    return topo, np.arange(len(fleet), dtype=np.int64)
+
+
+def dedicated_fleet(topo: TopologySpec, routing: Sequence[int]) -> FleetSpec:
+    """The per-link (no lease sharing) view of a routed topology.
+
+    Every pair pays the FULL ``L_cci`` of its routed port — what the PR-1
+    planner would charge this portfolio. Planning this fleet with
+    :func:`repro.fleet.engine.plan_fleet` gives the topology report's
+    lease-sharing baseline.
+    """
+    r = topo.validate_routing(routing)
+    links = []
+    for i, pr in enumerate(topo.pairs):
+        m = int(r[i])
+        cap = min(pr.capacity_gb_hr, topo.ports[m].capacity_gb_hr)
+        links.append(
+            LinkSpec(
+                name=pr.name,
+                params=topo.combined_params(i, m),
+                capacity_gb_hr=cap,
+                family=pr.family,
+            )
+        )
+    return FleetSpec(tuple(links))

@@ -51,6 +51,20 @@ RTT_MS = {"intra_region": 2.0, "intra_continent": 28.0, "inter_continent": 85.0}
 TCP_WINDOW_BYTES = 3 * 2**20   # iperf default-ish per-connection window
 
 
+def cci_port_capacity_gbps(nominal_gbps: float = CCI_NOMINAL_GBPS) -> float:
+    """Hard deliverable rate of one CCI port at saturation (finding F1):
+    nominal minus the measured L2+L4 framing overhead. This is the ceiling
+    the fleet/topology planners use for a shared colocation port — VLAN
+    attachments burst elastically (F3), the port itself never does."""
+    return nominal_gbps * (1.0 - CCI_OVERHEAD)
+
+
+def vlan_access_capacity_gbps(vlan_nominal_gbps: float) -> float:
+    """Elastic-upward ceiling of one VLAN attachment (finding F3): bursts
+    reach up to +70% of nominal, never below."""
+    return vlan_nominal_gbps * VLAN_BURST_FACTOR
+
+
 def max_min_fair(demands: Sequence[float], capacity: float) -> np.ndarray:
     """Classic water-filling max-min fair allocation (finding F4).
 

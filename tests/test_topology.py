@@ -1,0 +1,385 @@
+"""Topology subsystem tests: spec stacking/validation, the identity-routing
+degeneration property (bit-for-bit vs the PR-1 per-link planner), the
+multi-pair engine vs its per-port float64 reference, routing optimization,
+port-capacity semantics, and the topology report."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.pricing import flat_rate
+from repro.core.togglecci import window_sums
+from repro.fleet import (
+    PairSpec,
+    PortSpec,
+    TopologyScenario,
+    TopologySpec,
+    build_fleet_scenario,
+    build_topology_report,
+    build_topology_scenario,
+    dedicated_fleet,
+    identity_topology,
+    optimize_routing,
+    plan_fleet,
+    plan_topology,
+    plan_topology_reference,
+    port_capacity_gb_hr,
+    routing_matrix,
+    topology_oracle,
+    vlan_access_gb_hr,
+)
+
+HORIZON = 1500
+
+
+def _one_port(name="p0", facility="fac00", **kw) -> PortSpec:
+    base = dict(
+        cloud="aws", L_cci=4.55, V_cci=0.1, c_cci=0.02,
+        D=6, T_cci=12, h=12, theta1=0.9, theta2=1.1,
+    )
+    base.update(kw)
+    return PortSpec(name=name, facility=facility, **base)
+
+
+def _one_pair(name, candidates, **kw) -> PairSpec:
+    base = dict(
+        src="gcp", dst="aws", L_vpn=0.105, vpn_tier=flat_rate(0.1),
+    )
+    base.update(kw)
+    return PairSpec(name=name, candidates=tuple(candidates), **base)
+
+
+# ---------------------------------------------------------------------------
+# Spec stacking and validation
+# ---------------------------------------------------------------------------
+
+
+def test_stack_shapes_and_routing_matrix():
+    topo = TopologySpec(
+        ports=(_one_port("p0"), _one_port("p1", facility="fac01")),
+        pairs=(
+            _one_pair("a", (0, 1)),
+            _one_pair("b", (1,)),
+            _one_pair("c", (0,)),
+        ),
+    )
+    arr = topo.stack([0, 1, 0])
+    assert arr.n_ports == 2 and arr.n_pairs == 3
+    assert arr.routing.shape == (2, 3)
+    R = np.asarray(arr.routing)
+    np.testing.assert_array_equal(R, [[1.0, 0.0, 1.0], [0.0, 1.0, 0.0]])
+    assert arr.toggle.D.shape == (2,)
+    assert arr.tier_bounds.shape == arr.tier_rates.shape == (3, 1)
+    # candidate matrix mirrors the per-pair candidate tuples
+    np.testing.assert_array_equal(
+        topo.candidate_matrix(),
+        [[True, True], [False, True], [True, False]],
+    )
+
+
+def test_routing_must_respect_candidates():
+    topo = TopologySpec(
+        ports=(_one_port("p0"), _one_port("p1")),
+        pairs=(_one_pair("a", (1,)),),
+    )
+    with pytest.raises(AssertionError, match="non-candidate"):
+        topo.stack([0])
+    with pytest.raises(AssertionError):
+        topo.stack([0, 1])  # wrong shape
+
+
+def test_pair_requires_candidates_and_indices_in_range():
+    with pytest.raises(AssertionError):
+        _one_pair("a", ())
+    with pytest.raises(AssertionError):
+        TopologySpec(ports=(_one_port(),), pairs=(_one_pair("a", (3,)),))
+
+
+def test_routing_matrix_is_padded_one_hot():
+    R = np.asarray(routing_matrix(np.array([2, 0, 2]), 4))
+    assert R.shape == (4, 3)
+    np.testing.assert_array_equal(R.sum(axis=0), 1.0)  # one port per pair
+    np.testing.assert_array_equal(R[1], 0.0)           # idle port row padded
+    np.testing.assert_array_equal(R[3], 0.0)
+
+
+# ---------------------------------------------------------------------------
+# The satellite property: identity routing degenerates to PR-1 plan_fleet
+# ---------------------------------------------------------------------------
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=3)
+def test_identity_routing_reproduces_plan_fleet_bit_for_bit(seed):
+    """A routing matrix degenerating to the identity (one private port per
+    link, unbounded port capacity) must reproduce the PR-1 per-link planner
+    BIT-FOR-BIT: decisions, states, and total costs."""
+    sc = build_fleet_scenario(12, horizon=HORIZON, seed=seed)
+    topo, routing = identity_topology(sc.fleet)
+    for renew in (False, True):
+        pf = plan_fleet(sc.fleet, sc.demand, renew_in_chunks=renew)
+        pt = plan_topology(topo, sc.demand, routing=routing, renew_in_chunks=renew)
+        np.testing.assert_array_equal(np.asarray(pt["x"]), np.asarray(pf["x"]))
+        np.testing.assert_array_equal(
+            np.asarray(pt["state"]), np.asarray(pf["state"])
+        )
+        # Costs too: the aggregation stage adds only exact zeros.
+        np.testing.assert_array_equal(
+            np.asarray(pt["toggle_cost"]), np.asarray(pf["toggle_cost"])
+        )
+        np.testing.assert_array_equal(
+            np.asarray(pt["vpn_hourly"]), np.asarray(pf["vpn_hourly"])
+        )
+        np.testing.assert_array_equal(
+            np.asarray(pt["static_cci"]), np.asarray(pf["static_cci"])
+        )
+
+
+# ---------------------------------------------------------------------------
+# Multi-pair engine == per-port float64 Python reference
+# ---------------------------------------------------------------------------
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=2)
+def test_topology_engine_matches_reference_all_families(seed):
+    """Two-part exactness contract (see plan_topology_reference): the FSM is
+    bit-for-bit on identical port cost series, and the engine's matmul
+    aggregation reproduces the independent numpy aggregation to f64 ulp
+    (comparing decisions ACROSS the two aggregations directly would be
+    flaky whenever a window sum lands within an ulp of a θ threshold)."""
+    from repro.fleet import topology_port_costs_reference
+
+    sc = build_topology_scenario(12, n_facilities=3, horizon=HORIZON, seed=seed)
+    assert set(sc.summary()) == {"constant", "bursty", "mirage", "puffer"}
+    routing = optimize_routing(sc.topo, sc.demand)
+    ind = topology_port_costs_reference(sc.topo, sc.demand, routing)
+    for renew in (False, True):
+        plan = plan_topology(sc.topo, sc.demand, routing=routing, renew_in_chunks=renew)
+        series = {
+            "vpn": np.asarray(plan["vpn_hourly"]),
+            "cci": np.asarray(plan["cci_hourly"]),
+        }
+        ref = plan_topology_reference(
+            sc.topo, sc.demand, routing,
+            renew_in_chunks=renew, port_costs=series,
+        )
+        np.testing.assert_array_equal(np.asarray(plan["x"]), ref["x"])
+        np.testing.assert_array_equal(np.asarray(plan["state"]), ref["state"])
+        np.testing.assert_allclose(
+            np.asarray(plan["toggle_cost"]), ref["toggle_cost"], rtol=1e-9
+        )
+        np.testing.assert_allclose(series["vpn"], ind["vpn"], rtol=1e-12, atol=1e-9)
+        np.testing.assert_allclose(series["cci"], ind["cci"], rtol=1e-12, atol=1e-9)
+
+
+def test_plan_topology_default_routing_co_optimizes():
+    sc = build_topology_scenario(8, n_facilities=2, horizon=600, seed=5)
+    plan = plan_topology(sc.topo, sc.demand)  # routing=None -> optimize_routing
+    want = optimize_routing(sc.topo, sc.demand)
+    got_n = np.asarray(plan["n_pairs"])
+    R = np.asarray(routing_matrix(want, sc.topo.n_ports))
+    np.testing.assert_array_equal(got_n, R.sum(axis=1))
+
+
+# ---------------------------------------------------------------------------
+# Shared-port semantics
+# ---------------------------------------------------------------------------
+
+
+def test_lease_is_paid_once_attachments_per_pair():
+    """Two pairs on one port: hourly CCI cost is L + 2V + c*(d1+d2), not
+    2L + ... — the economics the per-link planner cannot express."""
+    port = _one_port()
+    topo = TopologySpec(
+        ports=(port,),
+        pairs=(_one_pair("a", (0,)), _one_pair("b", (0,))),
+    )
+    d = np.full((2, 200), 50.0)
+    plan = plan_topology(topo, d, routing=[0, 0])
+    cci = np.asarray(plan["cci_hourly"])[0]
+    want = port.L_cci + 2 * port.V_cci + port.c_cci * 100.0
+    np.testing.assert_allclose(cci, want, rtol=1e-12)
+    vpn = np.asarray(plan["vpn_hourly"])[0]
+    want_vpn = 2 * (0.105 + 0.1 * 50.0)
+    np.testing.assert_allclose(vpn, want_vpn, rtol=1e-12)
+
+
+def test_port_capacity_clips_aggregated_cci_demand_only():
+    """The hard CCI ceiling (linksim F1) caps the port AGGREGATE; the VPN
+    counterfactual rides the public internet and only sees the per-pair
+    VLAN access clip."""
+    cap = 120.0
+    topo = TopologySpec(
+        ports=(_one_port(capacity_gb_hr=cap),),
+        pairs=(
+            _one_pair("a", (0,), capacity_gb_hr=90.0),
+            _one_pair("b", (0,), capacity_gb_hr=90.0),
+        ),
+    )
+    d = np.full((2, 300), 1000.0)
+    plan = plan_topology(topo, d, routing=[0, 0])
+    np.testing.assert_array_equal(np.asarray(plan["pair_demand"]), 90.0)
+    np.testing.assert_array_equal(np.asarray(plan["port_demand"])[0], cap)
+    # Reference clips identically -> identical decisions.
+    ref = plan_topology_reference(topo, d, [0, 0])
+    np.testing.assert_array_equal(np.asarray(plan["x"]), ref["x"])
+
+
+def test_unused_port_costs_nothing_and_stays_off():
+    topo = TopologySpec(
+        ports=(_one_port("used"), _one_port("idle", facility="fac01")),
+        pairs=(_one_pair("a", (0, 1)),),
+    )
+    d = np.full((1, 400), 200.0)
+    plan = plan_topology(topo, d, routing=[0])
+    assert float(np.asarray(plan["toggle_cost"])[1]) == 0.0
+    assert np.asarray(plan["x"])[1].sum() == 0
+    assert float(np.asarray(plan["n_pairs"])[1]) == 0.0
+
+
+def test_sharing_beats_dedicated_per_link_planning():
+    """Two CCI-friendly pairs on one shared port must cost strictly less
+    than the same routing priced per-link (each pair paying full L_cci)."""
+    topo = TopologySpec(
+        ports=(_one_port(),),
+        pairs=(_one_pair("a", (0,)), _one_pair("b", (0,))),
+    )
+    rng = np.random.default_rng(0)
+    d = rng.uniform(150.0, 250.0, size=(2, 1000))  # far above breakeven
+    routing = [0, 0]
+    plan = plan_topology(topo, d, routing=routing)
+    shared = float(np.sum(np.asarray(plan["toggle_cost"])))
+    ded = plan_fleet(dedicated_fleet(topo, routing), d)
+    dedicated = float(np.sum(np.asarray(ded["toggle_cost"])))
+    assert shared < dedicated
+    # The gap is at least half the duplicated lease (both links toggle ON
+    # most of the horizon, so ~one extra L_cci is paid almost throughout).
+    assert dedicated - shared > 0.5 * topo.ports[0].L_cci * d.shape[1] * 0.5
+
+
+# ---------------------------------------------------------------------------
+# Routing optimization
+# ---------------------------------------------------------------------------
+
+
+def test_optimize_routing_respects_candidates():
+    sc = build_topology_scenario(16, n_facilities=4, horizon=600, seed=9)
+    r = optimize_routing(sc.topo, sc.demand)
+    cand = sc.topo.candidate_matrix()
+    for i, m in enumerate(r):
+        assert cand[i, m]
+
+
+def test_optimize_routing_packs_shared_leases():
+    """Pairs with a common candidate port get packed together: the number
+    of opened ports must be well under one-per-pair."""
+    sc = build_topology_scenario(24, n_facilities=3, horizon=600, seed=2)
+    r = optimize_routing(sc.topo, sc.demand)
+    assert len(np.unique(r)) < sc.n_pairs / 2
+
+
+def test_optimize_routing_respects_capacity_headroom():
+    small, big = 100.0, 1e6
+    topo = TopologySpec(
+        ports=(
+            _one_port("small", capacity_gb_hr=small),
+            _one_port("big", L_cci=20.0, capacity_gb_hr=big),
+        ),
+        pairs=tuple(_one_pair(f"p{i}", (0, 1)) for i in range(4)),
+    )
+    d = np.full((4, 100), 60.0)  # any 2 pairs together exceed the small port
+    r = optimize_routing(topo, d, headroom=0.9)
+    # First pair fits the cheap small port; the rest must spill to the big one.
+    assert (r == 0).sum() == 1 and (r == 1).sum() == 3
+
+
+def test_optimize_routing_falls_back_when_everything_is_full():
+    topo = TopologySpec(
+        ports=(_one_port("only", capacity_gb_hr=10.0),),
+        pairs=(_one_pair("a", (0,)), _one_pair("b", (0,))),
+    )
+    d = np.full((2, 50), 500.0)
+    r = optimize_routing(topo, d)  # no feasible port: least-loaded fallback
+    np.testing.assert_array_equal(r, [0, 0])
+
+
+# ---------------------------------------------------------------------------
+# Scenario builder
+# ---------------------------------------------------------------------------
+
+
+def test_topology_scenario_shapes_and_calibration():
+    sc = build_topology_scenario(
+        10, n_facilities=3, ports_per_facility=2, horizon=HORIZON, seed=4
+    )
+    assert isinstance(sc, TopologyScenario)
+    assert sc.demand.shape == (10, HORIZON)
+    assert (sc.demand >= 0).all()
+    assert sc.n_ports == 6
+    assert set(p.cloud for p in sc.topo.ports) == {"aws", "azure"}
+    for po in sc.topo.ports:
+        assert po.capacity_gb_hr in (port_capacity_gb_hr(), port_capacity_gb_hr(100.0))
+    for pr in sc.topo.pairs:
+        other = pr.dst if pr.src == "gcp" else pr.src
+        # candidates all live on the pair's cloud, within `reach` facilities
+        facs = {sc.topo.ports[c].facility for c in pr.candidates}
+        assert len(facs) <= 2
+        assert all(sc.topo.ports[c].cloud == other for c in pr.candidates)
+        assert pr.capacity_gb_hr in [vlan_access_gb_hr(v) for v in (1, 2, 5, 10)]
+
+
+def test_linksim_calibrated_port_capacity():
+    from repro.traffic import linksim
+
+    assert port_capacity_gb_hr() == pytest.approx(10.0 * 0.95 * 450.0)
+    assert linksim.cci_port_capacity_gbps(100.0) == pytest.approx(95.0)
+    assert vlan_access_gb_hr(2) == pytest.approx(2 * 1.7 * 450.0)
+
+
+# ---------------------------------------------------------------------------
+# Report layer
+# ---------------------------------------------------------------------------
+
+
+def test_topology_report_savings_and_oracle_bound():
+    sc = build_topology_scenario(12, n_facilities=3, horizon=HORIZON, seed=11)
+    routing = optimize_routing(sc.topo, sc.demand)
+    plan = plan_topology(sc.topo, sc.demand, routing=routing)
+    rep = build_topology_report(sc, plan, routing, include_oracle=True)
+    assert len(rep.ports) == sc.n_ports
+    assert rep.ports_used == len(np.unique(routing))
+    t = rep.totals
+    assert t["togglecci"] == pytest.approx(sum(p.toggle_cost for p in rep.ports))
+    # Per-port OPT (same routing) lower-bounds ToggleCCI and best-static.
+    for p in rep.ports:
+        assert p.oracle_cost is not None
+        assert p.oracle_cost <= p.toggle_cost * (1 + 1e-9)
+        assert p.oracle_cost <= p.best_static * (1 + 1e-9)
+    assert "oracle_gap" in t and t["oracle_gap"] >= 1.0 - 1e-9
+    # Shared leases must not cost MORE than the per-link view of the same
+    # routing, and the multi-pair scenario should show real savings.
+    assert "lease_sharing_savings" in t
+    assert t["lease_sharing_savings"] > 0.0
+    text = rep.render_text()
+    assert "topology total" in text and "shared-lease saving" in text
+    assert rep.ports[0].name in text
+
+
+def test_topology_oracle_matches_manual_series():
+    topo = TopologySpec(
+        ports=(_one_port(),),
+        pairs=(_one_pair("a", (0,)),),
+    )
+    d = np.full((1, 300), 150.0)
+    oc = topology_oracle(topo, d, [0])
+    assert oc.shape == (1,)
+    plan = plan_topology(topo, d, routing=[0])
+    assert oc[0] <= float(np.asarray(plan["toggle_cost"])[0]) * (1 + 1e-9)
+
+
+def test_window_sums_public_api():
+    r = np.asarray(window_sums(np.ones(10), 3))
+    np.testing.assert_allclose(r, [0, 1, 2, 3, 3, 3, 3, 3, 3, 3])

@@ -1,10 +1,18 @@
 """CI throughput-regression gate for the planning engines.
 
-Compares the ``BENCH_*.json`` artifacts emitted by ``bench_fleet --smoke`` /
-``bench_topology --smoke`` against the committed baselines
-(``benchmarks/baselines.json``) and fails (exit 1) when a throughput metric
-regresses more than ``--max-regression`` (default 30%) below the scaled
-baseline.
+Compares the ``BENCH_*.json`` artifacts emitted by the ``--smoke`` benches
+(``bench_fleet`` / ``bench_topology`` / ``bench_policy``) against the
+committed baselines (``benchmarks/baselines.json``) and fails (exit 1) when
+a throughput metric regresses more than ``--max-regression`` (default 30%)
+below the scaled baseline.
+
+Two gate-integrity rules (a new bench must not silently bypass the gate):
+
+* an artifact WITHOUT a committed baseline entry fails with a clear message
+  telling you to add one to ``baselines.json`` — not a KeyError traceback;
+* any ``BENCH_*.json`` present next to the checked artifacts but NOT passed
+  on the command line fails the run (``--allow-unlisted`` opts out) — so a
+  bench that emits an artifact the workflow forgot to list is caught.
 
 Baselines are recorded on the reference dev container; CI runners are
 slower, so the workflow passes ``--scale`` (or sets ``BENCH_BASELINE_SCALE``)
@@ -22,6 +30,7 @@ CLI:
 from __future__ import annotations
 
 import argparse
+import glob
 import json
 import os
 import re
@@ -30,21 +39,54 @@ import sys
 DEFAULT_BASELINES = os.path.join(os.path.dirname(__file__), "baselines.json")
 
 
+class GateError(Exception):
+    """A gate-integrity failure with a human-actionable message."""
+
+
 def check_artifact(path: str, baselines: dict, *, scale: float, max_regression: float):
-    """Returns (name, metric, value, floor, ok) or raises on malformed input."""
+    """Returns (name, metric, value, floor, ok); raises GateError with a
+    clear message on missing baselines / malformed artifacts."""
     name = re.sub(r"^BENCH_|\.json$", "", os.path.basename(path))
     if name not in baselines:
-        raise KeyError(
-            f"{path}: no committed baseline for {name!r} "
-            f"(known: {sorted(baselines)}) — add it to baselines.json"
+        raise GateError(
+            f"{path}: benchmark {name!r} has NO committed baseline "
+            f"(known: {sorted(baselines)}). New benches must not bypass the "
+            "gate — record a --smoke run on the reference container and add "
+            f'a "{name}" entry to benchmarks/baselines.json'
         )
     base = baselines[name]
     metric, committed = base["metric"], float(base["value"])
-    with open(path) as f:
-        rows = json.load(f)
+    try:
+        with open(path) as f:
+            rows = json.load(f)
+    except OSError as e:
+        raise GateError(
+            f"{path}: listed on the command line but unreadable ({e}) — did "
+            "the bench fail to emit its artifact?"
+        )
+    except json.JSONDecodeError as e:
+        raise GateError(f"{path}: malformed artifact JSON ({e})")
+    if not rows or metric not in rows[0]:
+        raise GateError(
+            f"{path}: artifact rows carry no {metric!r} metric (baseline "
+            f"for {name!r} gates on it); keys: {sorted(rows[0]) if rows else []}"
+        )
     value = float(rows[0][metric])
     floor = committed * scale * (1.0 - max_regression)
     return name, metric, value, floor, value >= floor
+
+
+def find_unlisted(artifacts) -> list:
+    """BENCH_*.json files sitting next to the checked artifacts (or in CWD)
+    that were NOT passed on the command line — benches bypassing the gate."""
+    listed = {os.path.abspath(p) for p in artifacts}
+    dirs = {os.path.dirname(os.path.abspath(p)) for p in artifacts} or {os.getcwd()}
+    found = set()
+    for d in dirs:
+        found.update(
+            os.path.abspath(p) for p in glob.glob(os.path.join(d, "BENCH_*.json"))
+        )
+    return sorted(found - listed)
 
 
 def main(argv=None) -> int:
@@ -61,6 +103,10 @@ def main(argv=None) -> int:
         help="machine-speed discount on the committed baseline "
              "(CI runners are slower than the reference box)",
     )
+    ap.add_argument(
+        "--allow-unlisted", action="store_true",
+        help="do not fail on BENCH_*.json files present but not gated",
+    )
     args = ap.parse_args(argv)
 
     with open(args.baselines) as f:
@@ -68,10 +114,15 @@ def main(argv=None) -> int:
 
     failed = False
     for path in args.artifacts:
-        name, metric, value, floor, ok = check_artifact(
-            path, baselines,
-            scale=args.scale, max_regression=args.max_regression,
-        )
+        try:
+            name, metric, value, floor, ok = check_artifact(
+                path, baselines,
+                scale=args.scale, max_regression=args.max_regression,
+            )
+        except GateError as e:
+            print(f"FAIL: {e}")
+            failed = True
+            continue
         verdict = "ok" if ok else "REGRESSION"
         print(
             f"{name}: {metric}={value:.3g} vs floor {floor:.3g} "
@@ -79,6 +130,14 @@ def main(argv=None) -> int:
             f"-> {verdict}"
         )
         failed |= not ok
+
+    unlisted = find_unlisted(args.artifacts)
+    if unlisted and not args.allow_unlisted:
+        print(
+            "FAIL: emitted bench artifacts not gated (pass them on the "
+            "command line or --allow-unlisted): " + ", ".join(unlisted)
+        )
+        failed = True
     return 1 if failed else 0
 
 

@@ -18,6 +18,7 @@ from . import (
     bench_measurements,
     bench_mirage,
     bench_planner,
+    bench_policy,
     bench_puffer,
     bench_roofline,
     bench_sensitivity,
@@ -43,6 +44,10 @@ BENCHES = [
     ("topology_multipair", lambda: bench_topology.run(
         16 if FAST else 96, 2000 if FAST else 8760,
         n_facilities=3 if FAST else 4, repeats=2 if FAST else 5,
+    )),
+    ("policy_compare", lambda: bench_policy.run(
+        8 if FAST else 48, 1200 if FAST else 8760,
+        repeats=2 if FAST else 3, train_steps=120 if FAST else 300,
     )),
     ("roofline_e10", lambda: bench_roofline.run()),
 ]

@@ -25,6 +25,10 @@ Two equivalent implementations:
 * :func:`run_togglecci`      — pure-Python reference, returns rich diagnostics.
 * :func:`run_togglecci_scan` — ``jax.lax.scan`` version (jit/vmap-able across
   scenario batches; used by the sensitivity benchmarks and the planner).
+  Since the policy-layer refactor this is a thin wrapper over the shared
+  :func:`repro.fleet.policy.policy_scan` kernel with a ``ReactivePolicy`` —
+  the same kernel the fleet and topology planners call with pluggable
+  policies (forecast-gated, hysteresis).
 """
 from __future__ import annotations
 
@@ -190,6 +194,11 @@ def run_togglecci_scan(
 ):
     """``lax.scan`` ToggleCCI over precomputed per-hour mode costs.
 
+    A thin wrapper over the shared policy kernel: the FSM body lives ONCE in
+    :func:`repro.fleet.policy.policy_scan`, parameterized by a
+    :class:`~repro.fleet.policy.ReactivePolicy` (this function IS the
+    reactive policy entry point; other policies plug into the same kernel).
+
     Args:
       params: :class:`CostParams` (static Python scalars) or
         :class:`ToggleParams` (traceable array operands — required when
@@ -202,50 +211,14 @@ def run_togglecci_scan(
     vmap over leading scenario/link axes by vmapping this function (map the
     ``ToggleParams`` fields too for heterogeneous fleets).
     """
+    # The policy layer sits above core (it extends core's FSM); import
+    # lazily so the module graph stays acyclic at import time.
+    from repro.fleet.policy import policy_scan, reactive_policy
+
     tp = (
         params
         if isinstance(params, ToggleParams)
         else ToggleParams.from_cost_params(params)
     )
-    th1, th2, D, T_cci = tp.theta1, tp.theta2, tp.D, tp.T_cci
-    r_vpn_tr = window_sums(vpn_hourly, tp.h)
-    r_cci_tr = window_sums(cci_hourly, tp.h)
-    T = r_vpn_tr.shape[0]
-
-    def step(carry, rs):
-        state, t_state = carry
-        r_vpn, r_cci = rs
-
-        # Cascade identical to the python reference (start-of-hour transitions).
-        go_wait = (state == OFF) & (r_cci < th1 * r_vpn)
-        s1 = jnp.where(go_wait, WAITING, state)
-        ts1 = jnp.where(go_wait, 0, t_state)
-
-        wait_done = (s1 == WAITING) & (ts1 >= D)
-        s2 = jnp.where(wait_done, ON, s1)
-        ts2 = jnp.where(wait_done, 0, ts1)
-
-        past_commit = ts2 >= T_cci
-        at_renewal = (ts2 % T_cci) == 0
-        check = past_commit & at_renewal if renew_in_chunks else past_commit
-        go_off = (s2 == ON) & check & (r_cci > th2 * r_vpn)
-        s3 = jnp.where(go_off, OFF, s2)
-        ts3 = jnp.where(go_off, 0, ts2)
-
-        x_t = jnp.where(s3 == ON, 1, 0)
-        return (s3, ts3 + 1), (x_t, s3)
-
-    (_, _), (x, state_tr) = jax.lax.scan(
-        step, (jnp.int32(OFF), jnp.int32(0)), (r_vpn_tr, r_cci_tr)
-    )
-    acc = r_vpn_tr.dtype
-    total = jnp.sum(
-        jnp.where(x == 1, cci_hourly.astype(acc), vpn_hourly.astype(acc))
-    )
-    return {
-        "x": x,
-        "state": state_tr,
-        "r_vpn": r_vpn_tr,
-        "r_cci": r_cci_tr,
-        "total_cost": total,
-    }
+    pol = reactive_policy(tp, renew_in_chunks=renew_in_chunks)
+    return policy_scan(pol, vpn_hourly, cci_hourly)

@@ -28,7 +28,15 @@ computation. Mapping back to the paper:
   traceable one-hot routing matrix; a greedy co-optimizer
   (:func:`topology.optimize_routing`) packs leases, and ToggleCCI toggles
   each PORT on its pair-aggregated window costs. The identity routing
-  reproduces ``plan_fleet`` bit-for-bit.
+  reproduces ``plan_fleet`` bit-for-bit. :func:`topology.refine_routing`
+  adds a bounded pair-move local search on realized plan costs.
+* toggle decisions are a *pluggable policy layer* (:mod:`repro.fleet.policy`):
+  the paper's reactive FSM (default, bit-for-bit the old behavior), a
+  hysteresis/debounce ablation, and an SSM-forecast-gated policy
+  (:mod:`repro.models.ssm` demand head trained on port-aggregated history)
+  that fires lease requests ahead of sustained regime shifts — all three
+  run through ONE shared :func:`policy.policy_scan` kernel, the policy a
+  vmapped operand of the same compiled planners.
 
 Quick start::
 
@@ -53,6 +61,20 @@ from .engine import (  # noqa: F401
     plan_topology_reference,
     topology_oracle,
     topology_port_costs_reference,
+)
+from .policy import (  # noqa: F401
+    POLICY_KINDS,
+    ForecastGatedPolicy,
+    HysteresisPolicy,
+    ReactivePolicy,
+    forecast_fleet_policy,
+    forecast_gated_policy,
+    forecast_port_demand,
+    forecast_topology_policy,
+    hysteresis_policy,
+    make_policy,
+    policy_scan,
+    reactive_policy,
 )
 from .report import (  # noqa: F401
     FleetReport,
@@ -82,5 +104,6 @@ from .topology import (  # noqa: F401
     dedicated_fleet,
     identity_topology,
     optimize_routing,
+    refine_routing,
     routing_matrix,
 )

@@ -1,10 +1,15 @@
-"""Batched fleet planning: one jitted, vmapped ToggleCCI over N links.
+"""Batched fleet planning: one jitted, vmapped toggle policy over N links.
 
 The per-link pipeline, entirely inside ONE jit call:
 
   demand (N, T) --clip at per-link capacity--> d
   d --monthly_cumsum + batched tiered tables--> vpn/cci hourly costs (N, T)
-  costs --vmap(run_togglecci_scan) over the link axis--> x, state, totals
+  costs --vmap(policy_scan) over the link axis--> x, state, totals
+
+The toggle decision is a pluggable *policy operand* (:mod:`repro.fleet.policy`):
+the paper's reactive ToggleCCI by default, or SSM-forecast-gated /
+hysteresis variants — all through the same compiled scan, the policy pytree
+vmapped alongside the cost rows.
 
 Everything the per-link paper pipeline did in Python loops (cost series,
 window sums, FSM) is a single XLA program here; planning 100 links x 8760
@@ -39,17 +44,48 @@ from repro.core.costmodel import (
     tiered_marginal_cost_np,
     tiered_marginal_cost_tables,
 )
-from repro.core.togglecci import run_togglecci, run_togglecci_scan
+from repro.core.togglecci import run_togglecci
 from repro.kernels.tiered_cost import tiered_cost_batched
 
+from .policy import make_policy, policy_scan
 from .spec import FleetArrays, FleetSpec
 from .topology import TopologyArrays, TopologySpec, optimize_routing
 
 _JIT_CACHE: dict = {}
 
 
-def _build_plan_fn(hours_per_month: int, renew_in_chunks: bool, use_pallas: bool):
-    def plan(arrays: FleetArrays, demand: jax.Array) -> Dict[str, jax.Array]:
+def _run_policies(policy, demand_rows, vpn, cci):
+    """THE single FSM call site: one :func:`policy_scan` vmapped over the
+    link/port axis, the policy itself a mapped operand (every leaf carries
+    the leading axis — per-row thresholds, windows, forecasts, flags)."""
+    return jax.vmap(
+        lambda p, dd, v, c: policy_scan(p, v, c, demand=dd)
+    )(policy, demand_rows, vpn, cci)
+
+
+def _plan_outputs(policy, d, vpn, cci) -> Dict[str, jax.Array]:
+    """Shared tail of both planners: run the policies, add the static
+    comparators. ALWAYS-CCI still pays the provisioning delay: the first D
+    hours ride VPN (paper Fig. 11's "misses the first D")."""
+    out = _run_policies(policy, d, vpn, cci)
+    T = d.shape[1]
+    cci_live = jnp.arange(T)[None, :] >= policy.toggle.D[:, None]
+    static_cci = jnp.sum(jnp.where(cci_live, cci, vpn), axis=1)
+    return {
+        "x": out["x"],                     # (rows, T) 0/1 decision sequences
+        "state": out["state"],             # (rows, T) FSM states
+        "toggle_cost": out["total_cost"],  # (rows,)
+        "static_vpn": jnp.sum(vpn, axis=1),
+        "static_cci": static_cci,
+        "vpn_hourly": vpn,
+        "cci_hourly": cci,
+    }
+
+
+def _build_plan_fn(hours_per_month: int, use_pallas: bool):
+    def plan(
+        arrays: FleetArrays, demand: jax.Array, policy
+    ) -> Dict[str, jax.Array]:
         f = jnp.result_type(float)
         d = jnp.minimum(demand.astype(f), arrays.capacity[:, None])  # (N, T)
         month_cum = monthly_cumsum(d, hours_per_month)
@@ -74,28 +110,7 @@ def _build_plan_fn(hours_per_month: int, renew_in_chunks: bool, use_pallas: bool
             )
         vpn = arrays.L_vpn[:, None] + vpn_transfer
         cci = (arrays.L_cci + arrays.V_cci)[:, None] + arrays.c_cci[:, None] * d
-
-        out = jax.vmap(
-            lambda tp, v, c: run_togglecci_scan(
-                tp, v, c, renew_in_chunks=renew_in_chunks
-            )
-        )(arrays.toggle, vpn, cci)
-
-        # Static comparators. ALWAYS-CCI still pays the provisioning delay:
-        # the first D hours ride VPN (paper Fig. 11's "misses the first D").
-        T = d.shape[1]
-        cci_live = jnp.arange(T)[None, :] >= arrays.toggle.D[:, None]
-        static_cci = jnp.sum(jnp.where(cci_live, cci, vpn), axis=1)
-        return {
-            "x": out["x"],                    # (N, T) 0/1 decision sequences
-            "state": out["state"],            # (N, T) FSM states
-            "toggle_cost": out["total_cost"],  # (N,)
-            "static_vpn": jnp.sum(vpn, axis=1),
-            "static_cci": static_cci,
-            "vpn_hourly": vpn,
-            "cci_hourly": cci,
-            "demand": d,
-        }
+        return {**_plan_outputs(policy, d, vpn, cci), "demand": d}
 
     return plan
 
@@ -104,6 +119,7 @@ def plan_fleet(
     fleet: Union[FleetSpec, FleetArrays],
     demand,
     *,
+    policy=None,
     hours_per_month: int = 730,
     renew_in_chunks: bool = False,
     use_pallas: bool = False,
@@ -114,21 +130,31 @@ def plan_fleet(
       fleet: a :class:`FleetSpec` (stacked here, under x64) or pre-stacked
         :class:`FleetArrays`.
       demand: (N, T) hourly GB per link (clipped at per-link capacity).
+      policy: a :mod:`repro.fleet.policy` pytree with per-link leading axes
+        (e.g. :func:`~repro.fleet.policy.forecast_fleet_policy`). ``None``
+        resolves the spec's ``policy`` kind (default ``"reactive"`` — the
+        paper's ToggleCCI, bit-for-bit the pre-policy-layer behavior).
       hours_per_month: billing calendar (taken from the spec when given).
     Returns:
       dict of per-link arrays — see ``_build_plan_fn``.
     """
     with enable_x64():
+        kind = "reactive"
         if isinstance(fleet, FleetSpec):
             hours_per_month = fleet.hours_per_month
+            kind = fleet.policy
             arrays = fleet.stack(jnp.float64)
         else:
             arrays = fleet
-        key = (hours_per_month, renew_in_chunks, use_pallas)
+        if policy is None:
+            policy = make_policy(
+                kind, arrays.toggle, renew_in_chunks=renew_in_chunks
+            )
+        key = (hours_per_month, use_pallas)
         fn = _JIT_CACHE.get(key)
         if fn is None:
             fn = _JIT_CACHE.setdefault(key, jax.jit(_build_plan_fn(*key)))
-        return fn(arrays, jnp.asarray(demand, jnp.float64))
+        return fn(arrays, jnp.asarray(demand, jnp.float64), policy)
 
 
 def plan_fleet_reference(
@@ -159,8 +185,10 @@ def plan_fleet_reference(
 # ---------------------------------------------------------------------------
 
 
-def _build_topology_plan_fn(hours_per_month: int, renew_in_chunks: bool):
-    def plan(arrays: TopologyArrays, demand: jax.Array) -> Dict[str, jax.Array]:
+def _build_topology_plan_fn(hours_per_month: int):
+    def plan(
+        arrays: TopologyArrays, demand: jax.Array, policy
+    ) -> Dict[str, jax.Array]:
         f = jnp.result_type(float)
         # Pair stage: VLAN-access clip, per-pair tiered VPN counterfactuals.
         d = jnp.minimum(demand.astype(f), arrays.pair_capacity[:, None])  # (P, T)
@@ -183,25 +211,11 @@ def _build_topology_plan_fn(hours_per_month: int, renew_in_chunks: bool):
             + arrays.c_cci[:, None] * d_port
         )
 
-        # Port stage: the SAME two-level scan as plan_fleet, now over ports —
-        # ToggleCCI's window cost trend operates on port-aggregated demand.
-        out = jax.vmap(
-            lambda tp, v, c: run_togglecci_scan(
-                tp, v, c, renew_in_chunks=renew_in_chunks
-            )
-        )(arrays.toggle, vpn, cci)
-
-        T = d.shape[1]
-        cci_live = jnp.arange(T)[None, :] >= arrays.toggle.D[:, None]
-        static_cci = jnp.sum(jnp.where(cci_live, cci, vpn), axis=1)
+        # Port stage: the SAME shared policy scan as plan_fleet, now over
+        # ports — the policy's cost trend (and the forecaster's demand
+        # features) operate on port-aggregated series.
         return {
-            "x": out["x"],                     # (M, T) per-port decisions
-            "state": out["state"],             # (M, T) per-port FSM states
-            "toggle_cost": out["total_cost"],  # (M,)
-            "static_vpn": jnp.sum(vpn, axis=1),
-            "static_cci": static_cci,
-            "vpn_hourly": vpn,                 # (M, T) port-aggregated
-            "cci_hourly": cci,
+            **_plan_outputs(policy, d_port, vpn, cci),
             "pair_demand": d,                  # (P, T) access-clipped
             "port_demand": d_port,             # (M, T) CCI-clipped aggregate
             "n_pairs": n_pairs,                # (M,) attached pairs
@@ -215,6 +229,7 @@ def plan_topology(
     demand,
     *,
     routing: Optional[Sequence[int]] = None,
+    policy=None,
     hours_per_month: int = 730,
     renew_in_chunks: bool = False,
 ) -> Dict[str, jax.Array]:
@@ -227,25 +242,35 @@ def plan_topology(
       routing: (P,) candidate-port index per pair. ``None`` with a spec runs
         :func:`repro.fleet.topology.optimize_routing` on the demand first —
         that is the "co-optimize" entry point.
+      policy: per-PORT policy pytree (e.g.
+        :func:`~repro.fleet.policy.forecast_topology_policy` on the routed
+        arrays). ``None`` resolves the spec's ``policy`` kind (default
+        reactive — bit-for-bit the pre-policy-layer behavior).
     Returns:
       dict of per-port arrays — see ``_build_topology_plan_fn``.
     """
     with enable_x64():
+        kind = "reactive"
         if isinstance(topo, TopologySpec):
             hours_per_month = topo.hours_per_month
+            kind = topo.policy
             if routing is None:
                 routing = optimize_routing(topo, np.asarray(demand))
             arrays = topo.stack(routing, jnp.float64)
         else:
             assert routing is None, "pre-stacked arrays already carry a routing"
             arrays = topo
-        key = ("topology", hours_per_month, renew_in_chunks)
+        if policy is None:
+            policy = make_policy(
+                kind, arrays.toggle, renew_in_chunks=renew_in_chunks
+            )
+        key = ("topology", hours_per_month)
         fn = _JIT_CACHE.get(key)
         if fn is None:
             fn = _JIT_CACHE.setdefault(
-                key, jax.jit(_build_topology_plan_fn(hours_per_month, renew_in_chunks))
+                key, jax.jit(_build_topology_plan_fn(hours_per_month))
             )
-        return fn(arrays, jnp.asarray(demand, jnp.float64))
+        return fn(arrays, jnp.asarray(demand, jnp.float64), policy)
 
 
 def _month_cum_np(d: np.ndarray, hours_per_month: int) -> np.ndarray:
@@ -313,6 +338,12 @@ def plan_topology_reference(
     ``port_costs={"vpn": ..., "cci": ...}`` (e.g. the engine's own hourly
     outputs) to pin the series and assert the FSM property exactly; see
     ``benchmarks/bench_topology.py`` for the two-part verification.
+
+    Policy contract: this reference implements the REACTIVE policy (the
+    paper's FSM). It is the bit-exactness oracle for ``plan_topology`` with
+    its default/``ReactivePolicy`` operand — the property that proves the
+    policy-layer refactor behavior-preserving (``tests/test_policy.py``);
+    forecast-gated and hysteresis plans are measured against it, not by it.
     """
     from repro.core.costmodel import HourlyCosts
 

@@ -12,6 +12,15 @@ portfolio metrics PR-1 could not express:
   per-link (every pair paying its full ``L_cci``) vs shared; and
 * **oracle gap** — per-port ToggleCCI vs the offline DP on the same
   port-aggregated cost series (routing held fixed).
+
+The policy layer adds two more:
+
+* **forecast_gain** — the forecast-gated policy's cost vs reactive vs the
+  oracle, per port and aggregate: the fraction of the reactive-vs-oracle
+  gap that SSM demand forecasting closes; and
+* **routing_improvement** — realized-cost saving of the pair-move local
+  search (:func:`repro.fleet.topology.refine_routing`) over the greedy
+  routing.
 """
 from __future__ import annotations
 
@@ -20,11 +29,15 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
 from repro.core.togglecci import OFF, ON
 
 from .engine import (
     fleet_oracle,
     plan_fleet,
+    plan_topology,
     topology_oracle,
 )
 from .scenario import FleetScenario, TopologyScenario
@@ -185,6 +198,7 @@ class PortReport:
     on_fraction: float
     requests: Tuple[int, ...]
     releases: Tuple[int, ...]
+    forecast_cost: Optional[float] = None  # forecast-gated policy, same routing
 
     @property
     def best_static(self) -> float:
@@ -200,6 +214,17 @@ class PortReport:
             return None
         return self.toggle_cost / self.oracle_cost
 
+    @property
+    def forecast_gain(self) -> Optional[float]:
+        """Fraction of this port's reactive-vs-oracle gap that forecast
+        gating closed (1.0 = matched the offline DP, < 0 = made it worse)."""
+        if self.forecast_cost is None or self.oracle_cost is None:
+            return None
+        gap = self.toggle_cost - self.oracle_cost
+        if gap <= 0:
+            return None  # reactive already at the oracle: nothing to close
+        return (self.toggle_cost - self.forecast_cost) / gap
+
 
 @dataclasses.dataclass(frozen=True)
 class TopologyReport:
@@ -207,6 +232,9 @@ class TopologyReport:
     horizon: int
     routing: Tuple[int, ...]
     dedicated_cost: Optional[float]  # same routing, no lease sharing (PR-1 view)
+    refined_routing: Optional[Tuple[int, ...]] = None  # pair-move local search
+    refined_cost: Optional[float] = None               # reactive replan, refined routing
+    refine_base_cost: Optional[float] = None           # reactive cost, input routing
 
     @property
     def totals(self) -> Dict[str, float]:
@@ -232,6 +260,26 @@ class TopologyReport:
                 1.0 - agg["togglecci"] / self.dedicated_cost
                 if self.dedicated_cost
                 else 0.0
+            )
+        forecasts = [p.forecast_cost for p in self.ports if p.forecast_cost is not None]
+        if forecasts and len(forecasts) == len(self.ports):
+            agg["forecast"] = sum(forecasts)
+            if "oracle" in agg:
+                gap = agg["togglecci"] - agg["oracle"]
+                agg["forecast_gain"] = (
+                    (agg["togglecci"] - agg["forecast"]) / gap
+                    if gap > 0
+                    else float("nan")
+                )
+        if self.refined_cost is not None:
+            # Baseline is the REACTIVE cost of the input routing (the metric
+            # refine_routing optimizes) — the passed-in plan may have run a
+            # different policy, and mixing them would misattribute policy
+            # effects to routing.
+            base = self.refine_base_cost or agg["togglecci"]
+            agg["refined_cost"] = self.refined_cost
+            agg["routing_improvement"] = (
+                1.0 - self.refined_cost / base if base else 0.0
             )
         return agg
 
@@ -272,6 +320,19 @@ class TopologyReport:
         if "oracle_gap" in t:
             tail += f"  oracle gap {t['oracle_gap']:.3f}x"
         lines.append(tail)
+        if "forecast" in t:
+            line = f"forecast-gated: ${t['forecast']:.0f}"
+            if "forecast_gain" in t:
+                line += (
+                    f"  ({100 * t['forecast_gain']:+.1f}% of the "
+                    "reactive-vs-oracle gap closed)"
+                )
+            lines.append(line)
+        if "refined_cost" in t:
+            lines.append(
+                f"refined routing: ${t['refined_cost']:.0f}  "
+                f"({100 * t['routing_improvement']:+.2f}% vs greedy routing)"
+            )
         return "\n".join(lines)
 
 
@@ -283,6 +344,9 @@ def build_topology_report(
     include_oracle: bool = False,
     include_dedicated_baseline: bool = True,
     renew_in_chunks: bool = False,
+    forecast_plan: Optional[Dict[str, np.ndarray]] = None,
+    refine: bool = False,
+    refine_max_moves: int = 8,
 ) -> TopologyReport:
     """Assemble a :class:`TopologyReport` from :func:`plan_topology` outputs.
 
@@ -291,7 +355,17 @@ def build_topology_report(
     lease — so ``lease_sharing_savings`` isolates exactly what sharing buys.
     ``include_oracle`` runs the per-port offline DP on the port-aggregated
     cost series (numpy, off the hot path).
+    ``forecast_plan`` takes the outputs of :func:`plan_topology` run with a
+    :class:`~repro.fleet.policy.ForecastGatedPolicy` on the SAME routing and
+    adds the per-port ``forecast_cost`` column plus the aggregate
+    ``forecast_gain`` (fraction of the reactive-vs-oracle gap closed —
+    requires ``include_oracle``).
+    ``refine`` runs the pair-move local search
+    (:func:`repro.fleet.topology.refine_routing`) after the greedy routing
+    and reports ``routing_improvement`` on a full replan.
     """
+    from .topology import refine_routing
+
     topo = scenario.topo
     r = topo.validate_routing(routing)
     state = np.asarray(plan["state"])
@@ -313,6 +387,37 @@ def build_topology_report(
         )
         dedicated_cost = float(np.sum(np.asarray(ded["toggle_cost"])))
 
+    forecast_cost = (
+        np.asarray(forecast_plan["toggle_cost"], dtype=np.float64)
+        if forecast_plan is not None
+        else None
+    )
+
+    refined_routing = refined_cost = refine_base_cost = None
+    if refine:
+        r2, info = refine_routing(
+            topo,
+            scenario.demand,
+            r,
+            max_moves=refine_max_moves,
+            renew_in_chunks=renew_in_chunks,
+        )
+        # Replan under an EXPLICIT reactive policy: the local search ranks
+        # moves on reactive realized costs, and the spec's default kind may
+        # be one the engine cannot resolve on its own ("forecast").
+        from .policy import reactive_policy
+
+        with enable_x64():
+            arrays2 = topo.stack(r2, jnp.float64)
+            pol = reactive_policy(arrays2.toggle, renew_in_chunks=renew_in_chunks)
+        replanned = plan_topology(
+            arrays2, scenario.demand, policy=pol,
+            hours_per_month=topo.hours_per_month,
+        )
+        refined_cost = float(np.sum(np.asarray(replanned["toggle_cost"])))
+        refined_routing = tuple(int(v) for v in r2)
+        refine_base_cost = float(info["cost_before"])
+
     rows: List[PortReport] = []
     for m, po in enumerate(topo.ports):
         requests, releases = toggle_events(state[m])
@@ -328,6 +433,9 @@ def build_topology_report(
                 on_fraction=float(np.mean(x[m])),
                 requests=requests,
                 releases=releases,
+                forecast_cost=(
+                    float(forecast_cost[m]) if forecast_cost is not None else None
+                ),
             )
         )
     return TopologyReport(
@@ -335,4 +443,7 @@ def build_topology_report(
         horizon=T,
         routing=tuple(int(v) for v in r),
         dedicated_cost=dedicated_cost,
+        refined_routing=refined_routing,
+        refined_cost=refined_cost,
+        refine_base_cost=refine_base_cost,
     )

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -46,11 +46,19 @@ _VLAN_CHOICES = (1, 2, 5, 10)
 
 @dataclasses.dataclass(frozen=True)
 class FleetScenario:
-    """A fleet plus its (N, T) demand matrix and per-link metadata."""
+    """A fleet plus its (N, T) demand matrix and per-link metadata.
+
+    ``history`` is an optional (N, H) warm-up demand block drawn from the
+    SAME trace columns, strictly BEFORE the planning horizon — the training
+    input of the forecast-gated toggle policy
+    (:func:`repro.fleet.policy.forecast_fleet_policy`), kept disjoint so
+    forecasts stay causal.
+    """
 
     fleet: FleetSpec
     demand: np.ndarray          # (N, T) GB/hour
     horizon: int
+    history: Optional[np.ndarray] = None  # (N, H) GB/hour, hours < 0
 
     @property
     def n_links(self) -> int:
@@ -138,6 +146,7 @@ def build_fleet_scenario(
     n_links: int,
     *,
     horizon: int = 8760,
+    history_hours: int = 0,
     seed: int = 0,
     families: Sequence[str] = FAMILIES,
     demand_scale: float = 1.0,
@@ -146,18 +155,22 @@ def build_fleet_scenario(
 
     Each link's demand column is rescaled to mean ``demand_scale x`` a
     log-normal multiple of its breakeven rate, then clipped (by the engine)
-    at the link's physical capacity.
+    at the link's physical capacity. ``history_hours > 0`` prepends that
+    many warm-up hours to every trace and returns them separately as
+    ``scenario.history`` — forecaster training data disjoint from the
+    planning horizon.
     """
-    assert n_links >= 1 and horizon >= 24
+    assert n_links >= 1 and horizon >= 24 and history_hours >= 0
     rng = np.random.default_rng(seed)
     families = tuple(families)
     fam_of = [families[i % len(families)] for i in range(n_links)]
+    total = horizon + history_hours
 
     links, cols = [], []
     # Family groups emit their natural (T, n_family) matrices; links then
     # take columns — the multi-pair structure the paper's consumers dropped.
     group_cols = {
-        fam: _family_columns(fam, fam_of.count(fam), horizon, rng)
+        fam: _family_columns(fam, fam_of.count(fam), total, rng)
         for fam in families
     }
     taken = {fam: 0 for fam in families}
@@ -174,7 +187,7 @@ def build_fleet_scenario(
             * float(rng.lognormal(0.0, 0.7))
         )
         mean = col.mean()
-        col = col * (target / mean) if mean > 0 else np.full(horizon, target)
+        col = col * (target / mean) if mean > 0 else np.full(total, target)
         links.append(
             LinkSpec(
                 name=f"{fam}-{i:03d}",
@@ -185,10 +198,12 @@ def build_fleet_scenario(
         )
         cols.append(col)
 
+    full = np.stack(cols)  # (N, history + horizon)
     return FleetScenario(
         fleet=FleetSpec(tuple(links)),
-        demand=np.stack(cols),  # (N, T)
+        demand=full[:, history_hours:],
         horizon=horizon,
+        history=full[:, :history_hours] if history_hours else None,
     )
 
 
@@ -199,11 +214,18 @@ def build_fleet_scenario(
 
 @dataclasses.dataclass(frozen=True)
 class TopologyScenario:
-    """A port/facility topology plus its (P, T) per-pair demand matrix."""
+    """A port/facility topology plus its (P, T) per-pair demand matrix.
+
+    ``history`` (optional, (P, H)) holds warm-up hours strictly before the
+    horizon — per-pair demand the forecast-gated policy aggregates onto
+    ports and trains its SSM head on
+    (:func:`repro.fleet.policy.forecast_topology_policy`).
+    """
 
     topo: TopologySpec
     demand: np.ndarray          # (P, T) GB/hour per region pair
     horizon: int
+    history: Optional[np.ndarray] = None  # (P, H) GB/hour, hours < 0
 
     @property
     def n_pairs(self) -> int:
@@ -259,6 +281,7 @@ def build_topology_scenario(
     ports_per_facility: int = 2,
     reach: int = 2,
     horizon: int = 8760,
+    history_hours: int = 0,
     seed: int = 0,
     families: Sequence[str] = FAMILIES,
     demand_scale: float = 1.0,
@@ -275,10 +298,11 @@ def build_topology_scenario(
     ALONE (so sharing strictly improves on the per-link economics).
     """
     assert n_pairs >= 1 and n_facilities >= 1 and ports_per_facility >= 1
-    assert horizon >= 24 and reach >= 1
+    assert horizon >= 24 and reach >= 1 and history_hours >= 0
     rng = np.random.default_rng(seed)
     families = tuple(families)
     fam_of = [families[i % len(families)] for i in range(n_pairs)]
+    total = horizon + history_hours
 
     clouds = ("aws", "azure") if n_facilities >= 2 else ("aws",)
     ports = []
@@ -294,7 +318,7 @@ def build_topology_scenario(
     }
 
     group_cols = {
-        fam: _family_columns(fam, fam_of.count(fam), horizon, rng)
+        fam: _family_columns(fam, fam_of.count(fam), total, rng)
         for fam in families
     }
     taken = {fam: 0 for fam in families}
@@ -355,11 +379,13 @@ def build_topology_scenario(
             * float(rng.lognormal(0.0, 0.7))
         )
         mean = col.mean()
-        col = col * (target / mean) if mean > 0 else np.full(horizon, target)
+        col = col * (target / mean) if mean > 0 else np.full(total, target)
         cols.append(col)
 
+    full = np.stack(cols)  # (P, history + horizon)
     return TopologyScenario(
         topo=TopologySpec(ports=tuple(ports), pairs=tuple(pairs)),
-        demand=np.stack(cols),  # (P, T)
+        demand=full[:, history_hours:],
         horizon=horizon,
+        history=full[:, :history_hours] if history_hours else None,
     )

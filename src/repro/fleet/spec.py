@@ -85,12 +85,24 @@ class FleetArrays(NamedTuple):
 
 @dataclasses.dataclass(frozen=True)
 class FleetSpec:
-    """An ordered portfolio of links sharing one billing calendar."""
+    """An ordered portfolio of links sharing one billing calendar.
+
+    ``policy`` selects the toggle decision rule the engine resolves when no
+    policy object is passed (see :mod:`repro.fleet.policy`): ``"reactive"``
+    (the paper's ToggleCCI, default), ``"hysteresis"``, or ``"forecast"``
+    (which additionally needs a trained forecaster passed explicitly).
+    """
 
     links: Tuple[LinkSpec, ...]
+    policy: str = "reactive"
 
     def __post_init__(self) -> None:
         assert len(self.links) >= 1
+        from .policy import POLICY_KINDS
+
+        assert self.policy in POLICY_KINDS, (
+            f"unknown toggle policy {self.policy!r} (known: {POLICY_KINDS})"
+        )
         hpms = {l.params.hours_per_month for l in self.links}
         assert len(hpms) == 1, (
             "fleet links must share hours_per_month (one billing calendar); "

@@ -21,6 +21,8 @@ from __future__ import annotations
 
 import math
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
@@ -443,3 +445,133 @@ def slstm_decode(cfg: ModelConfig, p, x, cache):
     ff = jax.nn.silu(y @ p["ffn"]["wg"]) * (y @ p["ffn"]["wi"])
     out = y + ff @ p["ffn"]["wo"]
     return out, {"c": c, "n": n, "h": h, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# Demand forecaster (fleet toggle-policy layer)
+# ---------------------------------------------------------------------------
+#
+# A deliberately tiny diagonal linear SSM over scalar demand series: the
+# state is a bank of exponential moving averages at learnably-mixed
+# timescales (h_t = a ⊙ h_{t-1} + (1-a) u_t), read out in
+# deviation-from-persistence form
+#
+#     y_t = u_t + w·(h_t − u_t) + bias
+#
+# and trained to predict the MEAN demand over the next W-hour window. Two
+# robustness properties the forecast-gated toggle policy
+# (repro.fleet.policy.ForecastGatedPolicy) relies on:
+#
+# * the init (w=0, bias=0) is exactly the persistence forecast, so training
+#   can only move away from a sane baseline;
+# * the readout's DC gain is exactly 1 WHATEVER w learns (a constant series
+#   has h = u, so the correction vanishes): the model can express trend and
+#   shape corrections but cannot amplify the demand LEVEL. A free
+#   w·h + skip·u readout fits the training window equally well but
+#   multiplies any level shift between training history and live demand —
+#   on mirage's user-growth traces that over-predicted ~3-5x and the gated
+#   policy never released.
+#
+# The model operates in log1p space (inputs AND targets): corrections and
+# bias are then RELATIVE (multiplicative) adjustments, calibrated across
+# the level shift growth induces. Strictly causal: y_t sees u_{<=t} only;
+# use demand_forecaster_predict for the symmetric de-normalization.
+
+
+def demand_forecaster_init(key, state_dim: int = 8):
+    taus = jnp.geomspace(2.0, 512.0, state_dim)
+    a = jnp.exp(-1.0 / taus)
+    del key  # init is deterministic (zero readout = persistence forecast)
+    return {
+        "raw_a": (jnp.log(a) - jnp.log1p(-a)).astype(jnp.float32),  # logit(a)
+        "w": jnp.zeros((state_dim,), jnp.float32),
+        "bias": jnp.zeros((), jnp.float32),
+    }
+
+
+def demand_forecaster_apply(params, u: jax.Array) -> jax.Array:
+    """u: (N, T) log1p of mean-normalized demand. Returns y (N, T) where
+    ``y[:, t]`` estimates log1p of the mean normalized demand over the
+    window starting at hour ``t+1``, using ``u[:, :t+1]`` only."""
+    a = jax.nn.sigmoid(params["raw_a"])                       # (S,)
+
+    def step(h, u_t):                                         # h (N,S), u_t (N,)
+        h = a * h + (1.0 - a) * u_t[:, None]
+        return h, h
+
+    uf = u.astype(jnp.float32)
+    h0 = jnp.zeros((u.shape[0], a.shape[0]), jnp.float32)
+    _, hs = jax.lax.scan(step, h0, uf.T)                      # (T, N, S)
+    dev = jnp.moveaxis(hs, 0, 1) - uf[..., None]              # (N, T, S)
+    return uf + dev @ params["w"] + params["bias"]
+
+
+def train_demand_forecaster(
+    series,
+    window: int,
+    *,
+    state_dim: int = 8,
+    steps: int = 300,
+    lr: float = 2e-2,
+    seed: int = 0,
+):
+    """Fit the forecaster on (N, H) non-negative demand history.
+
+    One model is shared across the N series (each normalized by its own
+    mean — returned as ``scale``; use :func:`demand_forecaster_predict` for
+    the symmetric denormalization); inputs and targets live in log1p space,
+    the target at hour t being log1p of the mean normalized demand over the
+    next ``window`` hours, masked where the window runs off the horizon.
+    Returns ``(params, scale)``.
+    """
+    from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+    s = np.asarray(series, np.float64)
+    assert s.ndim == 2 and s.shape[1] >= 2, s.shape
+    scale = np.maximum(s.mean(axis=1), 1e-9)
+    u_lin = jnp.asarray(s / scale[:, None], jnp.float32)
+    u = jnp.log1p(u_lin)
+    N, H = u.shape
+    W = int(max(1, min(window, H - 1)))
+
+    csum = jnp.concatenate(
+        [jnp.zeros((N, 1), jnp.float32), jnp.cumsum(u_lin, axis=1)], axis=1
+    )
+    t_idx = jnp.arange(H)
+    hi = jnp.minimum(t_idx + 1 + W, H)
+    target = jnp.log1p((csum[:, hi] - csum[:, t_idx + 1]) / W)  # (N, H)
+    mask = (t_idx + 1 + W <= H).astype(jnp.float32)[None, :]    # full windows only
+
+    params = demand_forecaster_init(jax.random.PRNGKey(seed), state_dim)
+    cfg = AdamWConfig(lr=lr, weight_decay=0.0, clip_norm=1.0)
+    opt = adamw_init(params, cfg)
+
+    denom = jnp.maximum(jnp.sum(mask), 1.0) * N
+
+    @jax.jit
+    def train_step(params, opt):
+        def loss_fn(p):
+            err = (demand_forecaster_apply(p, u) - target) ** 2 * mask
+            return jnp.sum(err) / denom
+
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        params, opt, _ = adamw_update(params, g, opt, cfg)
+        return params, opt, loss
+
+    for _ in range(steps):
+        params, opt, _ = train_step(params, opt)
+    return params, scale
+
+
+def demand_forecaster_predict(params, series, scale) -> np.ndarray:
+    """Forward-window mean-demand forecasts in original units.
+
+    ``series``: (N, T) raw demand; ``scale``: the (N,) normalizers returned
+    by :func:`train_demand_forecaster`. Returns (N, T) with column t the
+    predicted mean over the window starting at hour t+1 (causal — see
+    :func:`demand_forecaster_apply`).
+    """
+    scale = np.asarray(scale, np.float64)
+    u = jnp.log1p(jnp.asarray(np.asarray(series, np.float64) / scale[:, None], jnp.float32))
+    y = np.asarray(demand_forecaster_apply(params, u), np.float64)
+    return np.maximum(np.expm1(y), 0.0) * scale[:, None]

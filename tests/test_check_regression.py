@@ -1,0 +1,78 @@
+"""Gate-integrity tests for benchmarks.check_regression.
+
+The failure modes that used to bypass the CI throughput gate: an artifact
+with no committed baseline raised a bare KeyError traceback, and a bench
+that emitted a BENCH_*.json the workflow never listed was simply ignored.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.check_regression import check_artifact, find_unlisted, main
+
+
+def _write(path, rows):
+    with open(path, "w") as f:
+        json.dump(rows, f)
+    return str(path)
+
+
+@pytest.fixture
+def baselines(tmp_path):
+    path = tmp_path / "baselines.json"
+    _write(path, {"fleet": {"metric": "link_hours_per_s", "value": 1e6}})
+    return str(path)
+
+
+def test_passing_artifact(tmp_path, baselines, capsys):
+    art = _write(tmp_path / "BENCH_fleet.json", [{"link_hours_per_s": 9.9e5}])
+    assert main([art, "--baselines", baselines]) == 0
+    assert "ok" in capsys.readouterr().out
+
+
+def test_regression_fails(tmp_path, baselines, capsys):
+    art = _write(tmp_path / "BENCH_fleet.json", [{"link_hours_per_s": 1e5}])
+    assert main([art, "--baselines", baselines]) == 1
+    assert "REGRESSION" in capsys.readouterr().out
+
+
+def test_missing_baseline_fails_with_clear_message(tmp_path, baselines, capsys):
+    """A NEW bench without a committed baseline must fail the gate with an
+    actionable message — not silently pass, not a KeyError traceback."""
+    art = _write(tmp_path / "BENCH_shiny.json", [{"whatever": 1.0}])
+    assert main([art, "--baselines", baselines]) == 1
+    out = capsys.readouterr().out
+    assert "NO committed baseline" in out and "baselines.json" in out
+
+
+def test_missing_metric_fails(tmp_path, baselines, capsys):
+    art = _write(tmp_path / "BENCH_fleet.json", [{"some_other_key": 1.0}])
+    assert main([art, "--baselines", baselines]) == 1
+    assert "no 'link_hours_per_s'" in capsys.readouterr().out
+
+
+def test_unlisted_artifact_fails(tmp_path, baselines, capsys):
+    """An emitted BENCH artifact that is not passed on the command line is
+    a bench bypassing the gate — fail loudly unless explicitly allowed."""
+    art = _write(tmp_path / "BENCH_fleet.json", [{"link_hours_per_s": 9.9e5}])
+    stray = _write(tmp_path / "BENCH_stray.json", [{"x": 1.0}])
+    assert main([art, "--baselines", baselines]) == 1
+    assert "not gated" in capsys.readouterr().out
+    assert find_unlisted([art]) == [os.path.abspath(stray)]
+    assert main([art, "--baselines", baselines, "--allow-unlisted"]) == 0
+
+
+def test_check_artifact_floor_math(tmp_path, baselines):
+    art = _write(tmp_path / "BENCH_fleet.json", [{"link_hours_per_s": 5e5}])
+    with open(baselines) as f:
+        b = json.load(f)
+    name, metric, value, floor, ok = check_artifact(
+        art, b, scale=0.5, max_regression=0.30
+    )
+    assert name == "fleet" and value == 5e5
+    assert floor == pytest.approx(1e6 * 0.5 * 0.7)
+    assert ok

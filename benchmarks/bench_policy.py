@@ -32,6 +32,7 @@ from jax.experimental import enable_x64
 
 from repro.fleet import (
     FAMILIES,
+    FAMILY_MARGINS,
     build_topology_report,
     build_topology_scenario,
     forecast_topology_policy,
@@ -63,7 +64,7 @@ def run(
     n_facilities: int = 3,
     ports_per_facility: int = 2,
     repeats: int = 3,
-    margin: float = 0.05,
+    margin: float = None,
     train_steps: int = 300,
     include_oracle: bool = True,
     families=FAMILIES,
@@ -95,9 +96,16 @@ def run(
         hyst = make_policy("hysteresis", arrays.toggle)
         hplan, _ = _timed_plan(arrays, demand, hpm, hyst, 1)
 
+        # Per-family confidence margin (ROADMAP: mirage's growth trace
+        # over-triggered under the stationary families' margin) — a --margin
+        # override applies to every family.
+        fam_margin = (
+            FAMILY_MARGINS.get(family, 0.05) if margin is None else margin
+        )
         t0 = time.perf_counter()
         fpol = forecast_topology_policy(
-            arrays, sc.demand, sc.history, margin=margin, steps=train_steps
+            arrays, sc.demand, sc.history, margin=fam_margin,
+            hours_per_month=hpm, steps=train_steps,
         )
         train_s = time.perf_counter() - t0
         fplan, fbest_s = _timed_plan(arrays, demand, hpm, fpol, repeats)
@@ -125,7 +133,7 @@ def run(
             "oracle_cost": t.get("oracle"),
             "oracle_gap": t.get("oracle_gap"),
             "forecast_gain": t.get("forecast_gain"),
-            "margin": margin,
+            "margin": fam_margin,
         })
 
     gains = {
@@ -160,7 +168,10 @@ def main() -> None:
     ap.add_argument("--facilities", type=int, default=3)
     ap.add_argument("--ports-per-facility", type=int, default=2)
     ap.add_argument("--repeats", type=int, default=3)
-    ap.add_argument("--margin", type=float, default=0.05)
+    ap.add_argument(
+        "--margin", type=float, default=None,
+        help="override the per-family FAMILY_MARGINS with one scalar",
+    )
     ap.add_argument("--train-steps", type=int, default=300)
     ap.add_argument("--families", nargs="+", default=list(FAMILIES))
     ap.add_argument("--seed", type=int, default=0)

@@ -1,0 +1,135 @@
+"""Streaming-runtime throughput: is per-tick replanning production-viable?
+
+The offline engines amortize one jit dispatch over 8760 hours; a serving
+system replans EVERY hour. This bench measures :class:`repro.fleet.runtime.
+FleetRuntime` in exactly that regime — N links advanced one hour per jitted
+vmapped dispatch, the per-tick outputs synchronously consumed (as an
+actuation loop would consume the modes) — and reports
+
+* ``link_steps_per_s``  — the gated CI metric (reactive policy; the
+  acceptance bar is ≥ 1e6 on one CPU device: per-tick dispatch overhead,
+  not FLOPs, is what could sink it);
+* ``tick_us``           — wall per streaming tick (the replanning latency a
+  serving loop pays every simulated hour);
+* ``forecast_link_steps_per_s`` — same loop under the SSM-forecast-gated
+  policy in live mode (carried forecaster state);
+* a decision-equality check of the whole streamed horizon against the
+  offline ``plan_fleet`` (the tentpole's bit-exactness contract, enforced
+  here on bench-sized workloads too).
+
+CLI:
+  python -m benchmarks.bench_runtime           # 2048 links x 3000 ticks
+  python -m benchmarks.bench_runtime --smoke   # CI: 2048 x 600, artifact
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+
+from repro.fleet import FleetRuntime, build_fleet_scenario, plan_fleet, streaming_forecast_policy
+
+from ._util import save_rows, write_bench_artifact
+
+
+def _time_stream(rt: FleetRuntime, cols, warmup: int = 20) -> float:
+    """Seconds per tick, steady state (jit warm, per-tick sync consume)."""
+    for t in range(warmup):
+        jax.block_until_ready(rt.step(cols[t % len(cols)])["x"])
+    t0 = time.perf_counter()
+    for c in cols[warmup:]:
+        jax.block_until_ready(rt.step(c)["x"])
+    return (time.perf_counter() - t0) / max(1, len(cols) - warmup)
+
+
+def run(n_links: int = 1024, ticks: int = 3000, *, history: int = 600, seed: int = 0):
+    assert n_links >= 1 and ticks >= 100
+    sc = build_fleet_scenario(
+        n_links, horizon=ticks, history_hours=history, seed=seed
+    )
+    cols = [np.ascontiguousarray(sc.demand[:, t]) for t in range(ticks)]
+
+    # Reactive streaming (the gated metric).
+    rt = FleetRuntime(sc.fleet)
+    per_tick = _time_stream(rt, cols)
+
+    # Decision equality vs the offline batch plan on the same horizon.
+    rt.reset()
+    streamed = rt.run(sc.demand)
+    plan = plan_fleet(sc.fleet, sc.demand)
+    exact = bool(
+        np.array_equal(streamed["x"], np.asarray(plan["x"]))
+        and np.array_equal(streamed["state"], np.asarray(plan["state"]))
+    )
+    assert exact, "streamed decisions diverged from the offline plan"
+
+    # Forecast-gated live mode: SSM state carried through the jitted step.
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+
+    with enable_x64():
+        arrays = sc.fleet.stack(jnp.float64)
+    t0 = time.perf_counter()
+    pol, fc = streaming_forecast_policy(
+        arrays, sc.history, steps=60, hours_per_month=sc.fleet.hours_per_month
+    )
+    train_s = time.perf_counter() - t0
+    frt = FleetRuntime(
+        arrays, policy=pol, forecaster=fc,
+        hours_per_month=sc.fleet.hours_per_month,
+    )
+    f_per_tick = _time_stream(frt, cols)
+
+    rows = [{
+        "links": n_links,
+        "ticks": ticks,
+        "link_steps_per_s": n_links / per_tick,
+        "tick_us": per_tick * 1e6,
+        "forecast_link_steps_per_s": n_links / f_per_tick,
+        "forecast_tick_us": f_per_tick * 1e6,
+        "forecaster_train_s": train_s,
+        "bit_exact_vs_offline": exact,
+    }]
+    save_rows("runtime", rows)
+    derived = (
+        f"link_steps_per_s={rows[0]['link_steps_per_s']:.3g} "
+        f"tick_us={rows[0]['tick_us']:.1f} "
+        f"forecast={rows[0]['forecast_link_steps_per_s']:.3g}/s"
+    )
+    return rows, derived
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--links", type=int, default=2048)
+    ap.add_argument("--ticks", type=int, default=3000)
+    ap.add_argument("--history", type=int, default=600)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="CI mode: 2048 links x 600 ticks, BENCH artifact",
+    )
+    args = ap.parse_args()
+    if args.smoke:
+        args.links, args.ticks, args.history = 2048, 600, 300
+    rows, derived = run(
+        args.links, args.ticks, history=args.history, seed=args.seed
+    )
+    r = rows[0]
+    print(
+        f"runtime: {r['links']} links streamed {r['ticks']} ticks -> "
+        f"{r['link_steps_per_s']:.3g} link-steps/s "
+        f"({r['tick_us']:.1f} us/tick; forecast-gated "
+        f"{r['forecast_link_steps_per_s']:.3g}/s), "
+        f"bit-exact vs offline: {r['bit_exact_vs_offline']}"
+    )
+    print(derived)
+    if args.smoke:
+        print("artifact:", write_bench_artifact("runtime", rows))
+
+
+if __name__ == "__main__":
+    main()

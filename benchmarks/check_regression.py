@@ -14,6 +14,10 @@ Two gate-integrity rules (a new bench must not silently bypass the gate):
   on the command line fails the run (``--allow-unlisted`` opts out) — so a
   bench that emits an artifact the workflow forgot to list is caught.
 
+On GitHub Actions the run also appends a (bench, metric, baseline,
+measured, ratio, pass/fail) markdown table to ``$GITHUB_STEP_SUMMARY``, so
+a regression is readable from the job page without downloading artifacts.
+
 Baselines are recorded on the reference dev container; CI runners are
 slower, so the workflow passes ``--scale`` (or sets ``BENCH_BASELINE_SCALE``)
 to discount the absolute numbers. Note the two factors COMPOUND: the
@@ -76,6 +80,50 @@ def check_artifact(path: str, baselines: dict, *, scale: float, max_regression: 
     return name, metric, value, floor, value >= floor
 
 
+def render_summary_table(results, *, scale: float, max_regression: float) -> str:
+    """Markdown summary of one gate run — readable in the Actions job page
+    without downloading artifacts.
+
+    ``results`` rows are ``(name, metric, baseline, measured, ok)`` for
+    checked artifacts, or ``(name, None, None, None, False)`` with ``name``
+    holding the error text for gate-integrity failures. Ratio is measured /
+    committed baseline (UNscaled, so 1.00 always means "matches the
+    reference box"); pass/fail is judged against the scaled floor.
+    """
+    lines = [
+        "### Bench throughput gate",
+        "",
+        f"Floor = baseline × {scale:g} (runner scale) × "
+        f"{1.0 - max_regression:g} (allowed regression)",
+        "",
+        "| bench | metric | baseline | measured | ratio | result |",
+        "|---|---|---:|---:|---:|---|",
+    ]
+    errors = []
+    for name, metric, baseline, measured, ok in results:
+        if metric is None:
+            errors.append(name)
+            continue
+        lines.append(
+            f"| {name} | {metric} | {baseline:.3g} | {measured:.3g} "
+            f"| {measured / baseline:.2f} | {'✅ pass' if ok else '❌ FAIL'} |"
+        )
+    for err in errors:
+        lines.append(f"| — | — | — | — | — | ❌ {err} |")
+    return "\n".join(lines) + "\n"
+
+
+def write_step_summary(text: str, path: str = "") -> bool:
+    """Append ``text`` to the GitHub Actions step summary when available.
+    Returns whether anything was written (no-op outside Actions)."""
+    path = path or os.environ.get("GITHUB_STEP_SUMMARY", "")
+    if not path:
+        return False
+    with open(path, "a") as f:
+        f.write(text)
+    return True
+
+
 def find_unlisted(artifacts) -> list:
     """BENCH_*.json files sitting next to the checked artifacts (or in CWD)
     that were NOT passed on the command line — benches bypassing the gate."""
@@ -113,6 +161,7 @@ def main(argv=None) -> int:
         baselines = json.load(f)
 
     failed = False
+    results = []
     for path in args.artifacts:
         try:
             name, metric, value, floor, ok = check_artifact(
@@ -121,6 +170,7 @@ def main(argv=None) -> int:
             )
         except GateError as e:
             print(f"FAIL: {e}")
+            results.append((str(e), None, None, None, False))
             failed = True
             continue
         verdict = "ok" if ok else "REGRESSION"
@@ -129,15 +179,24 @@ def main(argv=None) -> int:
             f"(baseline x {args.scale:g} scale, -{100 * args.max_regression:.0f}%) "
             f"-> {verdict}"
         )
+        results.append((name, metric, float(baselines[name]["value"]), value, ok))
         failed |= not ok
 
     unlisted = find_unlisted(args.artifacts)
     if unlisted and not args.allow_unlisted:
-        print(
-            "FAIL: emitted bench artifacts not gated (pass them on the "
+        msg = (
+            "emitted bench artifacts not gated (pass them on the "
             "command line or --allow-unlisted): " + ", ".join(unlisted)
         )
+        print(f"FAIL: {msg}")
+        results.append((msg, None, None, None, False))
         failed = True
+
+    write_step_summary(
+        render_summary_table(
+            results, scale=args.scale, max_regression=args.max_regression
+        )
+    )
     return 1 if failed else 0
 
 

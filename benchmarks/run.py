@@ -21,6 +21,7 @@ from . import (
     bench_policy,
     bench_puffer,
     bench_roofline,
+    bench_runtime,
     bench_sensitivity,
     bench_topology,
 )
@@ -48,6 +49,10 @@ BENCHES = [
     ("policy_compare", lambda: bench_policy.run(
         8 if FAST else 48, 1200 if FAST else 8760,
         repeats=2 if FAST else 3, train_steps=120 if FAST else 300,
+    )),
+    ("runtime_streaming", lambda: bench_runtime.run(
+        512 if FAST else 2048, 600 if FAST else 3000,
+        history=300 if FAST else 600,
     )),
     ("roofline_e10", lambda: bench_roofline.run()),
 ]

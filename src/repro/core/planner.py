@@ -25,6 +25,21 @@ import numpy as np
 from .pricing import CostParams, TieredRate, flat_rate
 from .togglecci import OFF, ON, WAITING
 
+# int8 payload + one f32 scale per 256-wide row: the billed-GB shrink factor
+# of the compressed pay-per-GB path (shared by the single-link planner below
+# and the fleet-level one in repro.fleet.runtime).
+COMPRESS_RATIO = 4.0 * (256.0 / 260.0)
+
+
+def collective_mode(state: int) -> str:
+    """Map one link's FSM state to its cross-pod collective mode.
+
+    ON means the leased link serves traffic: full-precision hierarchical
+    all-reduce. OFF/WAITING ride the pay-per-GB path: int8 + error-feedback
+    compressed sync (``repro.dist.collectives.sync_grads`` modes).
+    """
+    return "hierarchical" if state == ON else "compressed"
+
 
 def dci_scenario(
     *,
@@ -138,7 +153,7 @@ class InterconnectPlanner:
     billed demand by ``compress_ratio`` (int8+scales ~ 3.97x).
     """
 
-    COMPRESS_RATIO = 4.0 * (256.0 / 260.0)  # int8 payload + f32 scale per 256
+    COMPRESS_RATIO = COMPRESS_RATIO  # int8 payload + f32 scale per 256
 
     def __init__(self, params: Optional[CostParams] = None):
         self.params = params or dci_scenario()
@@ -153,7 +168,7 @@ class InterconnectPlanner:
 
     @property
     def mode(self) -> str:
-        return "hierarchical" if self.ctl.state == ON else "compressed"
+        return collective_mode(self.ctl.state)
 
     def feed_hour(self, cross_pod_bytes: float) -> str:
         """Account one hour of measured cross-pod traffic; returns the
@@ -165,6 +180,12 @@ class InterconnectPlanner:
         # the currently-served volume creates a hysteresis trap: once ON, the
         # VPN counterfactual looks 4x more expensive than it would really be,
         # and the controller never releases. See test_planner_*.)
+        # The static-VPN comparator's tier state resets on the same monthly
+        # calendar as every other tier state in the cost model (it used to
+        # accumulate forever, drifting into cheaper tiers and understating
+        # the always-VPN baseline on multi-month runs).
+        if self.ctl.hour % self.params.hours_per_month == 0:
+            self._vpn_ctl_cum = 0.0
         vpn_cost, cci_cost = self.ctl.hourly_costs(
             raw_gb / self.COMPRESS_RATIO, raw_gb
         )
@@ -197,6 +218,20 @@ class InterconnectPlanner:
             requests=list(self.ctl.requests),
             releases=list(self.ctl.releases),
         )
+
+
+def fleet_planner(fleet, **kw):
+    """N-link generalization of :class:`InterconnectPlanner`.
+
+    Returns a :class:`repro.fleet.runtime.ElasticFleetPlanner`: the same
+    feed-bytes/actuate-modes contract, but every link stepped in ONE jitted
+    vmapped tick through the pluggable policy layer (reactive by default).
+    Lives behind a factory so core keeps no import edge onto the fleet
+    subsystem (which already imports core).
+    """
+    from repro.fleet.runtime import ElasticFleetPlanner
+
+    return ElasticFleetPlanner(fleet, **kw)
 
 
 def cross_pod_bytes_per_step(hlo_text: str, *, pod_axis_size: int = 2) -> float:

@@ -1,6 +1,9 @@
 """Gradient synchronization modes over the (pod, data, model) mesh.
 
-``sync_grads`` is the cross-pod actuator the InterconnectPlanner drives:
+``sync_grads`` is the cross-pod actuator the interconnect planners drive
+(:class:`repro.core.planner.InterconnectPlanner` for one link,
+:class:`repro.fleet.runtime.ElasticFleetPlanner` for a fleet — each link's
+FSM mode selects this module's path per tick):
 
 * ``direct``        one flat mean over every data-parallel axis;
 * ``hierarchical``  mean within each pod (cheap ICI), then across pods — the
@@ -10,11 +13,14 @@
                     ~4x fewer wire (billed) bytes on the pay-per-GB path.
 
 All modes run under ``shard_map`` so the collectives are explicit in compiled
-HLO (the telemetry tests meter them there).
+HLO (the telemetry tests meter them there). :func:`sync_wire_bytes` prices a
+sync's cross-pod bytes under each mode — the demand model the planners feed
+back into the next hour's toggle decision (endogenous demand).
 """
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -97,3 +103,46 @@ def sync_grads(grads, mesh, *, mode: str = "direct", err_state=None):
     )
     outs, errs = mapped(grads, err_in)
     return outs, (errs if use_err else None)
+
+
+def sync_wire_bytes(grads, mode: str) -> int:
+    """Cross-pod wire (billed) bytes of ONE ``sync_grads`` call under ``mode``.
+
+    The planners' demand model: ``hierarchical``/``direct`` move every leaf
+    at its own precision; ``compressed`` moves int8 payload plus one f32
+    scale per quantization row (last-dim rows) — the ~4x shrink that makes
+    the pay-per-GB path cheap (cf. ``COMPRESS_RATIO`` in
+    :mod:`repro.core.planner`).
+    """
+    assert mode in ("direct", "hierarchical", "compressed"), mode
+    total = 0
+    for g in jax.tree.leaves(grads):
+        n = int(math.prod(g.shape)) if g.shape else 1
+        if mode == "compressed":
+            rows = n // (g.shape[-1] if getattr(g, "ndim", 0) else 1)
+            total += n + max(rows, 1) * 4        # int8 payload + f32 scales
+        else:
+            total += n * jnp.dtype(g.dtype).itemsize
+    return total
+
+
+def fleet_sync_grads(grads_per_link, mesh, modes, err_states=None):
+    """Actuate a fleet plan: link ``i``'s gradients sync under ``modes[i]``.
+
+    The bridge between :class:`repro.fleet.runtime.ElasticFleetPlanner` and
+    the collective layer: each training job (one per interconnect link)
+    syncs hierarchically at full precision while its leased link is ON, and
+    int8-compressed over the pay-per-GB path otherwise. Returns
+    ``(synced, err_states, billed_bytes)`` lists; feed ``billed_bytes`` (x
+    steps/hour) back as the planner's next-hour demand to close the
+    endogenous loop.
+    """
+    assert len(grads_per_link) == len(modes), (len(grads_per_link), len(modes))
+    err_states = err_states or [None] * len(grads_per_link)
+    synced, errs, billed = [], [], []
+    for grads, mode, err in zip(grads_per_link, modes, err_states):
+        out, new_err = sync_grads(grads, mesh, mode=mode, err_state=err)
+        synced.append(out)
+        errs.append(new_err)
+        billed.append(sync_wire_bytes(grads, mode))
+    return synced, errs, billed

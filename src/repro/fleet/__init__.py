@@ -54,17 +54,22 @@ Quick start::
     print(build_topology_report(ts, tplan, routing).render_text())
 """
 from .engine import (  # noqa: F401
+    fleet_cost_series,
     fleet_oracle,
     plan_fleet,
     plan_fleet_reference,
     plan_topology,
     plan_topology_reference,
+    topology_cost_series,
     topology_oracle,
     topology_port_costs_reference,
 )
 from .policy import (  # noqa: F401
+    FAMILY_MARGINS,
     POLICY_KINDS,
     ForecastGatedPolicy,
+    family_margins,
+    fit_cost_coef,
     HysteresisPolicy,
     ReactivePolicy,
     forecast_fleet_policy,
@@ -75,6 +80,13 @@ from .policy import (  # noqa: F401
     make_policy,
     policy_scan,
     reactive_policy,
+)
+from .runtime import (  # noqa: F401
+    ElasticFleetPlanner,
+    FleetPlannerReport,
+    FleetRuntime,
+    StreamingForecaster,
+    streaming_forecast_policy,
 )
 from .report import (  # noqa: F401
     FleetReport,

@@ -82,34 +82,54 @@ def _plan_outputs(policy, d, vpn, cci) -> Dict[str, jax.Array]:
     }
 
 
+def fleet_cost_series(
+    arrays: FleetArrays,
+    demand: jax.Array,
+    *,
+    hours_per_month: int,
+    use_pallas: bool = False,
+):
+    """The pricing stage of :func:`plan_fleet`: ``(d, vpn, cci)`` hourly series.
+
+    Split out so the forecast-policy factories and the streaming runtime
+    (:mod:`repro.fleet.runtime`) consume EXACTLY the series the offline
+    planner toggles on — any drift between them would break the
+    streaming-vs-offline bit-exactness contract.
+    """
+    f = jnp.result_type(float)
+    d = jnp.minimum(demand.astype(f), arrays.capacity[:, None])  # (N, T)
+    month_cum = monthly_cumsum(d, hours_per_month)
+    if use_pallas:
+        # f32 kernel path: pad T to a block multiple (zero demand rows
+        # cost zero) and interpret the kernel off-TPU.
+        from repro.kernels.tiered_cost import DEFAULT_BLOCK_T
+
+        T = d.shape[1]
+        pad = (-T) % DEFAULT_BLOCK_T
+        z = lambda a: jnp.pad(a.astype(jnp.float32), ((0, 0), (0, pad)))
+        vpn_transfer = tiered_cost_batched(
+            z(month_cum),
+            z(d),
+            arrays.tier_bounds.astype(jnp.float32),
+            arrays.tier_rates.astype(jnp.float32),
+            interpret=jax.default_backend() != "tpu",
+        )[:, :T].astype(f)
+    else:
+        vpn_transfer = tiered_marginal_cost_tables(
+            month_cum, d, arrays.tier_bounds, arrays.tier_rates
+        )
+    vpn = arrays.L_vpn[:, None] + vpn_transfer
+    cci = (arrays.L_cci + arrays.V_cci)[:, None] + arrays.c_cci[:, None] * d
+    return d, vpn, cci
+
+
 def _build_plan_fn(hours_per_month: int, use_pallas: bool):
     def plan(
         arrays: FleetArrays, demand: jax.Array, policy
     ) -> Dict[str, jax.Array]:
-        f = jnp.result_type(float)
-        d = jnp.minimum(demand.astype(f), arrays.capacity[:, None])  # (N, T)
-        month_cum = monthly_cumsum(d, hours_per_month)
-        if use_pallas:
-            # f32 kernel path: pad T to a block multiple (zero demand rows
-            # cost zero) and interpret the kernel off-TPU.
-            from repro.kernels.tiered_cost import DEFAULT_BLOCK_T
-
-            T = d.shape[1]
-            pad = (-T) % DEFAULT_BLOCK_T
-            z = lambda a: jnp.pad(a.astype(jnp.float32), ((0, 0), (0, pad)))
-            vpn_transfer = tiered_cost_batched(
-                z(month_cum),
-                z(d),
-                arrays.tier_bounds.astype(jnp.float32),
-                arrays.tier_rates.astype(jnp.float32),
-                interpret=jax.default_backend() != "tpu",
-            )[:, :T].astype(f)
-        else:
-            vpn_transfer = tiered_marginal_cost_tables(
-                month_cum, d, arrays.tier_bounds, arrays.tier_rates
-            )
-        vpn = arrays.L_vpn[:, None] + vpn_transfer
-        cci = (arrays.L_cci + arrays.V_cci)[:, None] + arrays.c_cci[:, None] * d
+        d, vpn, cci = fleet_cost_series(
+            arrays, demand, hours_per_month=hours_per_month, use_pallas=use_pallas
+        )
         return {**_plan_outputs(policy, d, vpn, cci), "demand": d}
 
     return plan
@@ -185,32 +205,47 @@ def plan_fleet_reference(
 # ---------------------------------------------------------------------------
 
 
+def topology_cost_series(
+    arrays: TopologyArrays, demand: jax.Array, *, hours_per_month: int
+):
+    """The pricing + aggregation stages of :func:`plan_topology`.
+
+    Returns ``(d_pair, d_port, vpn, cci, n_pairs)`` — pair-level clipped
+    demand plus the port-aggregated hourly mode costs the port FSM toggles
+    on. Shared with the streaming runtime for the same bit-exactness reason
+    as :func:`fleet_cost_series`.
+    """
+    f = jnp.result_type(float)
+    # Pair stage: VLAN-access clip, per-pair tiered VPN counterfactuals.
+    d = jnp.minimum(demand.astype(f), arrays.pair_capacity[:, None])  # (P, T)
+    month_cum = monthly_cumsum(d, hours_per_month)
+    vpn_transfer = tiered_marginal_cost_tables(
+        month_cum, d, arrays.tier_bounds, arrays.tier_rates
+    )
+    vpn_pair = arrays.L_vpn[:, None] + vpn_transfer                   # (P, T)
+
+    # Aggregation stage: fold pairs onto their routed ports. VPN rides
+    # the public internet, so only the CCI volume sees the port's hard
+    # capacity (linksim F1); the lease is paid once, attachments per pair.
+    R = arrays.routing                                                # (M, P)
+    vpn = R @ vpn_pair                                                # (M, T)
+    d_port = jnp.minimum(R @ d, arrays.port_capacity[:, None])        # (M, T)
+    n_pairs = jnp.sum(R, axis=1)                                      # (M,)
+    cci = (
+        arrays.L_cci[:, None]
+        + (arrays.V_cci * n_pairs)[:, None]
+        + arrays.c_cci[:, None] * d_port
+    )
+    return d, d_port, vpn, cci, n_pairs
+
+
 def _build_topology_plan_fn(hours_per_month: int):
     def plan(
         arrays: TopologyArrays, demand: jax.Array, policy
     ) -> Dict[str, jax.Array]:
-        f = jnp.result_type(float)
-        # Pair stage: VLAN-access clip, per-pair tiered VPN counterfactuals.
-        d = jnp.minimum(demand.astype(f), arrays.pair_capacity[:, None])  # (P, T)
-        month_cum = monthly_cumsum(d, hours_per_month)
-        vpn_transfer = tiered_marginal_cost_tables(
-            month_cum, d, arrays.tier_bounds, arrays.tier_rates
+        d, d_port, vpn, cci, n_pairs = topology_cost_series(
+            arrays, demand, hours_per_month=hours_per_month
         )
-        vpn_pair = arrays.L_vpn[:, None] + vpn_transfer                   # (P, T)
-
-        # Aggregation stage: fold pairs onto their routed ports. VPN rides
-        # the public internet, so only the CCI volume sees the port's hard
-        # capacity (linksim F1); the lease is paid once, attachments per pair.
-        R = arrays.routing                                                # (M, P)
-        vpn = R @ vpn_pair                                                # (M, T)
-        d_port = jnp.minimum(R @ d, arrays.port_capacity[:, None])        # (M, T)
-        n_pairs = jnp.sum(R, axis=1)                                      # (M,)
-        cci = (
-            arrays.L_cci[:, None]
-            + (arrays.V_cci * n_pairs)[:, None]
-            + arrays.c_cci[:, None] * d_port
-        )
-
         # Port stage: the SAME shared policy scan as plan_fleet, now over
         # ports — the policy's cost trend (and the forecaster's demand
         # features) operate on port-aggregated series.

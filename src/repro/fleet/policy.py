@@ -176,67 +176,120 @@ class HysteresisPolicy:
         return (s, ts, up, down), out
 
 
-@_pytree_policy(("toggle", "margin", "pred_demand"))
+_LOG_COST_EPS = 1e-9  # idle rows (no routed pairs) have zero cost series
+
+
+def fit_cost_coef(demand, vpn_hourly, cci_hourly):
+    """Log-space demand→cost maps, least-squares on the first half.
+
+    ``(..., T)`` inputs → ``(..., 4)`` coefficients ``[a_vpn, b_vpn, a_cci,
+    b_cci]`` such that ``cost ≈ exp(a + b·log1p(demand))``. The pricing
+    *function* is static, so this is structure recovery, not lookahead. The
+    fit is MULTIPLICATIVE deliberately: an affine fit of the TIERED
+    (concave) VPN cost extrapolated outside its support crosses zero, and a
+    predicted ``p_vpn ≈ 0`` blows the predicted cost ratio up to hundreds —
+    the release gate ``p_cci > (θ₂+m)·p_vpn`` then fires whatever the
+    margin (the mirage −103% forecast_gain failure mode; the log-space map
+    keeps ratios bounded and positive, measured ≈ 0% there with the same
+    gates). Shared by the in-scan fallback of
+    :meth:`ForecastGatedPolicy.features` and the eager factories (which bake
+    the coefficients into the policy so the streaming runtime
+    (:mod:`repro.fleet.runtime`) never needs the full series).
+    """
+    T = vpn_hourly.shape[-1]
+    fit_T = max(T // 2, 2)
+    x = jnp.log1p(demand[..., :fit_T])
+    xm = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - xm) ** 2, axis=-1)
+
+    def loglin(y):
+        y0 = jnp.log(jnp.maximum(y[..., :fit_T], _LOG_COST_EPS))
+        cov = jnp.mean((x - xm) * (y0 - jnp.mean(y0, axis=-1, keepdims=True)), axis=-1)
+        beta = jnp.where(var > 1e-12, cov / jnp.maximum(var, 1e-12), 0.0)
+        return jnp.mean(y0, axis=-1) - beta * xm[..., 0], beta
+
+    av, bv = loglin(vpn_hourly)
+    ac, bc = loglin(cci_hourly)
+    return jnp.stack([av, bv, ac, bc], axis=-1)
+
+
+def predicted_mode_costs(pred, cost_coef, dtype):
+    """Map predicted demand through the log-space fit → (pred_vpn, pred_cci).
+
+    Elementwise, so the offline scan (full ``(T,)`` rows) and the streaming
+    runtime (one tick) produce bit-identical gate inputs.
+    """
+    lp = jnp.log1p(pred.astype(dtype))
+    coef = cost_coef.astype(dtype)
+    pred_vpn = jnp.exp(coef[..., 0] + coef[..., 1] * lp)
+    pred_cci = jnp.exp(coef[..., 2] + coef[..., 3] * lp)
+    return pred_vpn, pred_cci
+
+
+@_pytree_policy(("toggle", "margin", "pred_demand", "cost_coef"))
 class ForecastGatedPolicy:
     """SSM-forecast-gated ToggleCCI.
 
     ``pred_demand[t]`` is the forecaster's causal estimate of mean demand
     over the next ``D + T_cci``-ish window, made from history through hour
     ``t-1`` (see :func:`forecast_port_demand`). :meth:`features` converts it
-    to predicted per-hour mode costs through affine fits on the realized
-    series (CCI cost is exactly affine in demand; tiered VPN is fitted by
-    least squares on the first half of the horizon — the pricing *function*
-    is static, so this is structure recovery, not lookahead). The gates:
+    to predicted per-hour mode costs through affine demand→cost maps
+    (:func:`fit_cost_coef`): ``cost_coef`` carries them explicitly (the
+    factories fit them eagerly — required by the streaming runtime, which
+    never sees the full series); with ``cost_coef=None`` the fit happens
+    inside :meth:`features` on the realized series, the original in-scan
+    behavior. The gates:
 
-    * request  — forecast alone fires early under a confidence margin
-      (``p_cci < (θ₁ − m)·p_vpn``), or the realized trigger fires AND the
-      forecast confirms it is not a transient spike;
-    * release  — symmetric: strong forecast alone, or realized AND forecast
-      agreeing CCI stays expensive (suppresses releases in transient dips,
+    * request  — forecast alone fires early when confidently cheap
+      (``p_cci < (θ₁ − m)·p_vpn``), or the realized trigger fires and the
+      forecast does not confidently object (``p_cci < (θ₁ + m)·p_vpn`` —
+      objection suppresses transient spikes);
+    * release  — symmetric: confidently-expensive forecast alone
+      (``p_cci > (θ₂ + m)·p_vpn``), or realized with no confident objection
+      (``p_cci > (θ₂ − m)·p_vpn`` — suppresses releases in transient dips,
       which would otherwise re-pay the provisioning delay).
+
+    The margin therefore interpolates between trusting the forecast (m → 0:
+    hard confirmation gates) and pure reactive ToggleCCI (m → ∞: forecast
+    can neither fire nor veto) — at m = 0 both forms coincide. ``margin``
+    is per-row (per link/port) because fleets mixing demand families need
+    different settings: on growth traces (mirage) reactive is already near
+    the oracle and the affine cost map is biased by tier drift, so a hard
+    veto *creates* spurious releases — measured −103% forecast_gain before
+    the slack, ≈ −0% at mirage's wide margin (see :data:`FAMILY_MARGINS`),
+    while bursty keeps its large gain under a tight one.
     """
 
     toggle: ToggleParams
     margin: jax.Array       # confidence margin m ≥ 0 on the forecast gates
     pred_demand: jax.Array  # (T,) causal forward-window mean demand, GB/hr
+    cost_coef: object = None  # (4,) [a_vpn, b_vpn, a_cci, b_cci] or None
     renew_in_chunks: bool = False
 
     def init_carry(self):
         return (jnp.int32(OFF), jnp.int32(0))
 
     def features(self, demand, vpn_hourly, cci_hourly):
+        if self.cost_coef is not None:
+            return predicted_mode_costs(
+                self.pred_demand, self.cost_coef, vpn_hourly.dtype
+            )
         assert demand is not None, (
             "ForecastGatedPolicy needs the demand series to map predicted "
-            "demand to predicted mode costs"
+            "demand to predicted mode costs (or pass explicit cost_coef)"
         )
-        T = vpn_hourly.shape[0]
-        fit_T = max(T // 2, 2)
-        d0 = demand[:fit_T]
-        dm = jnp.mean(d0)
-        var = jnp.mean((d0 - dm) ** 2)
-
-        def affine(y):
-            y0 = y[:fit_T]
-            cov = jnp.mean((d0 - dm) * (y0 - jnp.mean(y0)))
-            beta = jnp.where(var > 1e-12, cov / jnp.maximum(var, 1e-12), 0.0)
-            return jnp.mean(y0) - beta * dm, beta
-
-        av, bv = affine(vpn_hourly)
-        ac, bc = affine(cci_hourly)
-        pred = self.pred_demand.astype(vpn_hourly.dtype)
-        pred_vpn = jnp.maximum(av + bv * pred, 0.0)
-        pred_cci = jnp.maximum(ac + bc * pred, 0.0)
-        return (pred_vpn, pred_cci)
+        coef = fit_cost_coef(demand, vpn_hourly, cci_hourly)
+        return predicted_mode_costs(self.pred_demand, coef, vpn_hourly.dtype)
 
     def step(self, carry, window, extras):
         r_vpn, r_cci = window
         p_vpn, p_cci = extras
         tp, m = self.toggle, self.margin
         req = (p_cci < (tp.theta1 - m) * p_vpn) | (
-            (r_cci < tp.theta1 * r_vpn) & (p_cci < tp.theta1 * p_vpn)
+            (r_cci < tp.theta1 * r_vpn) & (p_cci < (tp.theta1 + m) * p_vpn)
         )
         rel = (p_cci > (tp.theta2 + m) * p_vpn) | (
-            (r_cci > tp.theta2 * r_vpn) & (p_cci > tp.theta2 * p_vpn)
+            (r_cci > tp.theta2 * r_vpn) & (p_cci > (tp.theta2 - m) * p_vpn)
         )
         return _fsm_cascade(tp, self.renew_in_chunks, carry, req, rel)
 
@@ -319,14 +372,26 @@ def forecast_gated_policy(
     toggle: ToggleParams,
     pred_demand,
     *,
-    margin: float = 0.05,
+    margin=0.05,
+    cost_coef=None,
     renew_in_chunks: bool = False,
 ) -> ForecastGatedPolicy:
+    """Wrap forward-window demand predictions as a gated policy.
+
+    ``margin`` is a scalar or a per-row array matching ``toggle.theta1``
+    (per-link/port confidence bars — see :func:`family_margins`).
+    ``cost_coef`` (rows, 4) bakes the demand→cost affine maps in; ``None``
+    defers the fit to scan time (offline planners only — the streaming
+    runtime requires explicit coefficients).
+    """
     f = jnp.result_type(float)
     return ForecastGatedPolicy(
         toggle=toggle,
-        margin=jnp.full(jnp.shape(toggle.theta1), margin, f),
+        margin=jnp.broadcast_to(
+            jnp.asarray(margin, f), jnp.shape(toggle.theta1)
+        ),
         pred_demand=jnp.asarray(pred_demand, f),
+        cost_coef=None if cost_coef is None else jnp.asarray(cost_coef, f),
         renew_in_chunks=bool(renew_in_chunks),
     )
 
@@ -347,6 +412,37 @@ def make_policy(kind: str, toggle: ToggleParams, *, renew_in_chunks=False, **kw)
             "policy=... to the planner"
         )
     raise ValueError(f"unknown toggle policy {kind!r} (known: {POLICY_KINDS})")
+
+
+# Per-family confidence margins for the forecast gates. One scalar margin
+# cannot serve a mixed fleet: stationary/bursty families tolerate a tight
+# bar (and bursty thrives on it), while mirage's user-growth traces need a
+# wider one — reactive is already near the oracle there, so the forecast
+# should only act when confident (the ROADMAP's mirage forecast_gain
+# regression; see the ForecastGatedPolicy docstring for the gate
+# semantics). Values measured by `bench_policy` margin sweeps
+# (48 pairs x 8760 h per family, seed 0): mirage −0.7% at 0.05 vs +1.3-1.4%
+# on the 0.10-0.15 plateau; the others are flat across 0.02-0.10.
+FAMILY_MARGINS = {
+    "constant": 0.05,
+    "bursty": 0.05,
+    "mirage": 0.15,
+    "puffer": 0.05,
+}
+
+
+def family_margins(families, *, default: float = 0.05, overrides=None) -> np.ndarray:
+    """Per-row confidence margins from demand-family labels.
+
+    ``families`` is one label per link/port row (e.g. ``[l.family for l in
+    fleet.links]``); unknown labels fall back to ``default``. Returns a
+    (rows,) float array for the ``margin=`` argument of the forecast-policy
+    factories.
+    """
+    table = dict(FAMILY_MARGINS)
+    if overrides:
+        table.update(overrides)
+    return np.asarray([table.get(f, default) for f in families], np.float64)
 
 
 # ---------------------------------------------------------------------------
@@ -421,7 +517,8 @@ def forecast_fleet_policy(
     demand,
     history=None,
     *,
-    margin: float = 0.05,
+    margin=0.05,
+    hours_per_month: int = 730,
     renew_in_chunks=False,
     **train_kw,
 ) -> ForecastGatedPolicy:
@@ -429,8 +526,15 @@ def forecast_fleet_policy(
 
     ``arrays`` is a :class:`~repro.fleet.spec.FleetArrays`; ``demand``/
     ``history`` are (N, T)/(N, H) GB/hr (clipped at link capacity here, as
-    the engine does).
+    the engine does). The demand→cost coefficients are fitted eagerly on the
+    engine's own cost series (:func:`repro.fleet.engine.fleet_cost_series`)
+    and baked into the policy, so the streaming runtime can gate on them
+    without ever seeing the full horizon.
     """
+    from jax.experimental import enable_x64
+
+    from .engine import fleet_cost_series
+
     cap = np.asarray(arrays.capacity, np.float64)[:, None]
     clip = lambda d: np.minimum(np.asarray(d, np.float64), cap)
     pred = forecast_port_demand(
@@ -439,8 +543,16 @@ def forecast_fleet_policy(
         forecast_horizon_hours(arrays.toggle),
         **train_kw,
     )
+    with enable_x64():
+        d, vpn, cci = fleet_cost_series(
+            arrays,
+            jnp.asarray(demand, jnp.float64),
+            hours_per_month=hours_per_month,
+        )
+        coef = fit_cost_coef(d, vpn, cci)
     return forecast_gated_policy(
-        arrays.toggle, pred, margin=margin, renew_in_chunks=renew_in_chunks
+        arrays.toggle, pred, margin=margin, cost_coef=coef,
+        renew_in_chunks=renew_in_chunks,
     )
 
 
@@ -449,7 +561,8 @@ def forecast_topology_policy(
     demand,
     history=None,
     *,
-    margin: float = 0.05,
+    margin=0.05,
+    hours_per_month: int = 730,
     renew_in_chunks=False,
     **train_kw,
 ) -> ForecastGatedPolicy:
@@ -459,8 +572,14 @@ def forecast_topology_policy(
     aggregation mirrors the engine (VLAN access clip per pair, hard CCI clip
     on the port aggregate), so the forecaster sees exactly the series whose
     costs the port FSM toggles on — ROADMAP: "forecast each port's
-    aggregate, not each pair".
+    aggregate, not each pair". Cost coefficients are fitted eagerly on the
+    engine's port-aggregated series and baked into the policy (streaming-
+    runtime ready), exactly as in :func:`forecast_fleet_policy`.
     """
+    from jax.experimental import enable_x64
+
+    from .engine import topology_cost_series
+
     R = np.asarray(arrays.routing, np.float64)
     pair_cap = np.asarray(arrays.pair_capacity, np.float64)[:, None]
     port_cap = np.asarray(arrays.port_capacity, np.float64)[:, None]
@@ -473,6 +592,14 @@ def forecast_topology_policy(
         forecast_horizon_hours(arrays.toggle),
         **train_kw,
     )
+    with enable_x64():
+        _, d_port, vpn, cci, _ = topology_cost_series(
+            arrays,
+            jnp.asarray(demand, jnp.float64),
+            hours_per_month=hours_per_month,
+        )
+        coef = fit_cost_coef(d_port, vpn, cci)
     return forecast_gated_policy(
-        arrays.toggle, pred, margin=margin, renew_in_chunks=renew_in_chunks
+        arrays.toggle, pred, margin=margin, cost_coef=coef,
+        renew_in_chunks=renew_in_chunks,
     )

@@ -1,0 +1,570 @@
+"""Streaming fleet runtime: the online half of the planning stack.
+
+Everything before this module is *offline*: ``plan_fleet`` / ``plan_topology``
+consume the whole 8760-hour demand matrix in one call. The paper's ToggleCCI
+is an *online* algorithm, though — and a serving system only ever sees one
+hour at a time. :class:`FleetRuntime` steps the SAME pluggable policy layer
+(:mod:`repro.fleet.policy`) one tick at a time over every link/port in ONE
+jitted vmapped step, carrying all policy state explicitly:
+
+* the FSM carry (state / dwell counters — whatever ``policy.init_carry``
+  returns, vmapped per row);
+* the sliding-window state — NOT a naive running sum: the offline kernel
+  computes ``r[t] = pref[t] − pref[max(0, t−h)]`` from float64 prefix sums,
+  so the runtime carries the running prefix and a ring buffer of past prefix
+  VALUES and takes the same difference. Add/subtract ring buffers drift from
+  prefix differences in floating point; prefix rings make N incremental
+  steps decision-BIT-EXACT with one offline ``policy_scan``
+  (property-tested in ``tests/test_fleet_runtime.py``);
+* the billing state (cumulative volume + value at month start, so the
+  tiered VPN rate matches :func:`repro.core.costmodel.monthly_cumsum`
+  exactly);
+* the forecast SSM state (:func:`repro.models.ssm.demand_forecaster_step`)
+  when the policy is forecast-gated and runs in live mode.
+
+Two demand routings, mirroring the offline engines: *fleet* (each row one
+link) and *topology* (pair demand folded onto shared CCI ports through the
+routing matrix, pair-level tier state + port-level FSMs).
+
+On top sits the actuation layer (ROADMAP "elastic serving integration"):
+:class:`ElasticFleetPlanner` is the N-link generalization of
+:class:`repro.core.planner.InterconnectPlanner` — per-link modes select the
+hierarchical full-precision vs int8-compressed ``sync_grads`` path
+(:mod:`repro.dist.collectives`), and the compressed path's ~4x billed-GB
+reduction feeds back as next-hour demand: the endogenous loop CCI-style
+studies treat as exogenous.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Optional, Sequence, Union
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from repro.core.costmodel import tiered_marginal_cost_tables
+from repro.core.planner import COMPRESS_RATIO, collective_mode
+
+from .policy import ForecastGatedPolicy, make_policy, predicted_mode_costs
+from .spec import FleetArrays, FleetSpec
+from .topology import TopologyArrays, TopologySpec
+
+_STEP_CACHE: dict = {}
+
+
+class RuntimeState(NamedTuple):
+    """The explicit carry of one streaming step.
+
+    Split by residence: the FSM carry and the forecaster's SSM state are
+    device-side (donated through the jitted tick); everything sequential —
+    the float64 cost/demand PREFIX accumulators and the prefix ring buffers
+    — lives host-side in numpy. That split is deliberate twice over: (1)
+    numpy's elementwise float64 adds/moves are exactly the ``np.cumsum``
+    prefixes the offline references use, so streaming stays bit-exact by
+    construction (XLA fuses a+b*c into FMA and turns cumsum into a parallel
+    prefix — neither matches); (2) an in-jit ring buffer defeats XLA's
+    donation aliasing (the read forces a copy-on-write of the whole ring
+    every tick — ~Hbuf x rows x 8 bytes of memcpy that host-side slot
+    assignment does for free).
+
+    Demand/billing rows are per PAIR (== per link in fleet mode); cost
+    prefix rows are per PORT (== per link in fleet mode).
+    """
+
+    t: int                  # the tick about to be served
+    fsm: tuple              # device: policy carry, leaves (rows,)
+    ssm_h: jax.Array        # device: (M, S) live forecaster state ((M, 0) unused)
+    t_dev: jax.Array        # device twin of t (transfers cost ~100µs; the
+                            # replay index must not pay one per tick)
+    dcum: np.ndarray        # (P,) cumulative clipped billed demand, == full[t]
+    dcum_month: np.ndarray  # (P,) dcum at the current month's start
+    vpn_pref: np.ndarray    # (M,) exclusive prefix of hourly VPN cost
+    cci_pref: np.ndarray    # (M,) exclusive prefix of hourly CCI cost
+    ring_vpn: np.ndarray    # (M, Hbuf) past vpn_pref values, slot = hour % Hbuf
+    ring_cci: np.ndarray    # (M, Hbuf)
+    pred_live: np.ndarray   # (M,) next-tick demand forecast (zeros when unused)
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamingForecaster:
+    """A trained demand forecaster packaged for O(1)-per-tick stepping.
+
+    ``fit`` trains the :mod:`repro.models.ssm` head on a strictly-earlier
+    history block and warms the recurrent state through it, so live
+    predictions are causal from tick 0 — ``pred0`` is the readout after the
+    last history hour, exactly ``forecast_port_demand``'s first live column.
+    """
+
+    params: dict            # demand-forecaster readout/EMA parameters
+    scale: np.ndarray       # (rows,) per-row mean normalizers
+    h0: np.ndarray          # (rows, S) state after consuming the history
+    pred0: np.ndarray       # (rows,) forecast for live hour 0, GB/hr
+
+    @classmethod
+    def fit(cls, history, window: int, **train_kw) -> "StreamingForecaster":
+        from repro.models.ssm import (
+            demand_forecaster_apply,
+            demand_forecaster_state,
+            train_demand_forecaster,
+        )
+
+        history = np.asarray(history, np.float64)
+        assert history.ndim == 2 and history.shape[1] >= 2, (
+            "StreamingForecaster.fit needs a (rows, H>=2) history block — "
+            "live streaming has no future to fit on"
+        )
+        params, scale = train_demand_forecaster(history, window, **train_kw)
+        u = jnp.log1p(jnp.asarray(history / scale[:, None], jnp.float32))
+        y = np.asarray(demand_forecaster_apply(params, u), np.float64)
+        pred0 = np.maximum(np.expm1(y[:, -1]), 0.0) * scale
+        h0 = np.asarray(demand_forecaster_state(params, u))
+        return cls(params=params, scale=scale, h0=h0, pred0=pred0)
+
+
+def _build_step(topology: bool, pred_source: Optional[str], endo: bool):
+    """This tick's jitted compute: pricing + forecast gates + FSM transition.
+
+    The sequential accumulators (prefixes, rings, tier state) stay host-side
+    (see :class:`RuntimeState`); their per-tick reductions enter PACKED into
+    one ``(k · rows,)`` float64 operand, and everything the host needs back
+    leaves as one packed float64 result — host↔device transfers cost ~100µs
+    EACH on CPU, so one each way per tick is the difference between 1e5 and
+    1e6+ link-steps/s. The tick counter rides the device carry for the same
+    reason.
+
+    ``pred_source``: ``None`` (memoryless policies), ``"replay"`` (index the
+    policy's precomputed ``pred_demand`` column — the bit-exactness path) or
+    ``"live"`` (carried SSM state, endogenous-demand capable). ``endo``:
+    the packed input carries a separate CCI-path demand vector (endogenous
+    two-shape pricing).
+    """
+
+    def step(arrays, policy, fc, fsm, ssm_h, t, packed):
+        f = jnp.result_type(float)
+        P = (arrays.pair_capacity if topology else arrays.capacity).shape[0]
+        M = arrays.toggle.theta1.shape[0]
+
+        # --- unpack the host's per-tick vector ----------------------------
+        parts = [P] + ([P] if endo else []) + [P, M, M] + ([M] if pred_source == "live" else [])
+        offs = np.concatenate([[0], np.cumsum(parts)])
+        chunk = iter(
+            jax.lax.slice(packed, (int(a),), (int(b),))
+            for a, b in zip(offs[:-1], offs[1:])
+        )
+        demand_t = next(chunk)
+        cci_demand_t = next(chunk) if endo else None
+        month_cum = next(chunk)
+        r_vpn = next(chunk)
+        r_cci = next(chunk)
+        pred_live = next(chunk) if pred_source == "live" else None
+
+        # --- pricing stage: this tick's column of *_cost_series -----------
+        if topology:
+            d_pair = jnp.minimum(demand_t.astype(f), arrays.pair_capacity)
+            vpn_transfer = tiered_marginal_cost_tables(
+                month_cum[:, None], d_pair[:, None],
+                arrays.tier_bounds, arrays.tier_rates,
+            )[:, 0]
+            vpn_pair = arrays.L_vpn + vpn_transfer                    # (P,)
+            R = arrays.routing                                        # (M, P)
+            vpn_t = R @ vpn_pair                                      # (M,)
+            d_cci = (
+                d_pair if cci_demand_t is None
+                else jnp.minimum(cci_demand_t.astype(f), arrays.pair_capacity)
+            )
+            d_bill = jnp.minimum(R @ d_cci, arrays.port_capacity)     # (M,)
+            n_pairs = jnp.sum(R, axis=1)
+            cci_t = (
+                arrays.L_cci + arrays.V_cci * n_pairs + arrays.c_cci * d_bill
+            )
+            d_row = jnp.minimum(R @ d_pair, arrays.port_capacity)     # (M,)
+        else:
+            d_pair = jnp.minimum(demand_t.astype(f), arrays.capacity)  # (N,)
+            vpn_transfer = tiered_marginal_cost_tables(
+                month_cum[:, None], d_pair[:, None],
+                arrays.tier_bounds, arrays.tier_rates,
+            )[:, 0]
+            vpn_t = arrays.L_vpn + vpn_transfer
+            d_cci = (
+                d_pair if cci_demand_t is None
+                else jnp.minimum(cci_demand_t.astype(f), arrays.capacity)
+            )
+            cci_t = (arrays.L_cci + arrays.V_cci) + arrays.c_cci * d_cci
+            d_row = d_pair
+
+        # --- policy extras (forecast gates) -------------------------------
+        if pred_source is None:
+            extras = None
+        else:
+            if pred_source == "replay":
+                pred_t = jax.lax.dynamic_index_in_dim(
+                    policy.pred_demand, t, axis=1, keepdims=False
+                )
+            else:
+                pred_t = pred_live
+            extras = predicted_mode_costs(pred_t, policy.cost_coef, f)
+
+        # --- one FSM transition per row (the shared policy layer) ---------
+        fsm, (x_t, state_t) = jax.vmap(
+            lambda p, c, w, e: p.step(c, w, e)
+        )(policy, fsm, (r_vpn, r_cci), extras)
+
+        outs = [x_t.astype(f), state_t.astype(f), vpn_t, cci_t, d_pair]
+        if pred_source == "live":
+            from repro.models.ssm import demand_forecaster_step
+
+            u_t = jnp.log1p((d_row / fc["scale"]).astype(jnp.float32))
+            ssm_h, y_t = demand_forecaster_step(fc["params"], ssm_h, u_t)
+            outs.append(
+                jnp.maximum(jnp.expm1(y_t.astype(f)), 0.0) * fc["scale"]
+            )
+        return fsm, ssm_h, t + 1, jnp.concatenate(outs)
+
+    return step
+
+
+class FleetRuntime:
+    """Incremental fleet planner: ``step(demand_t) -> modes``, one jit call.
+
+    The streaming twin of :func:`repro.fleet.engine.plan_fleet` /
+    :func:`plan_topology`: the same pricing stage, the same shared policy
+    layer, but advanced one hour per call with every link/port stepped in
+    one jitted vmapped tick. ``N`` calls reproduce the offline planner's
+    decision sequences bit-for-bit for all three policies (the module
+    docstring explains the prefix-ring construction that makes the window
+    sums exact).
+
+    Args:
+      spec: a :class:`FleetSpec`/:class:`FleetArrays` (fleet routing) or
+        :class:`TopologySpec`/:class:`TopologyArrays` (shared-port routing;
+        give ``routing`` with a spec, or pre-stacked arrays).
+      policy: a policy pytree with per-row leading axes, as the offline
+        planners take. ``None`` resolves the spec's ``policy`` kind. A
+        :class:`ForecastGatedPolicy` must carry explicit ``cost_coef``
+        (build it with the forecast factories); its ``pred_demand`` columns
+        are replayed per tick unless a ``forecaster`` puts it in live mode.
+      forecaster: a :class:`StreamingForecaster` — switches the forecast
+        policy to live stepping (carried SSM state, no precomputed
+        predictions; required for endogenous demand).
+      hours_per_month: billing calendar. Taken from the SPEC when one is
+        given (the kwarg then has no effect — same contract as the offline
+        planners); pass pre-stacked arrays to choose it explicitly.
+    """
+
+    def __init__(
+        self,
+        spec,
+        *,
+        routing: Optional[Sequence[int]] = None,
+        policy=None,
+        hours_per_month: int = 730,
+        renew_in_chunks: bool = False,
+        forecaster: Optional[StreamingForecaster] = None,
+    ):
+        with enable_x64():
+            kind = "reactive"
+            if isinstance(spec, FleetSpec):
+                hours_per_month = spec.hours_per_month
+                kind = spec.policy
+                arrays: Union[FleetArrays, TopologyArrays] = spec.stack(jnp.float64)
+            elif isinstance(spec, TopologySpec):
+                hours_per_month = spec.hours_per_month
+                kind = spec.policy
+                assert routing is not None, (
+                    "a TopologySpec needs an explicit routing (the runtime "
+                    "cannot co-optimize it online; run optimize_routing first)"
+                )
+                arrays = spec.stack(routing, jnp.float64)
+            else:
+                assert routing is None, "pre-stacked arrays already carry a routing"
+                arrays = spec
+            self.topology = isinstance(arrays, TopologyArrays)
+            self.arrays = arrays
+            if policy is None:
+                policy = make_policy(
+                    kind, arrays.toggle, renew_in_chunks=renew_in_chunks
+                )
+            self.policy = policy
+
+            self.pred_source = None
+            self._fc = None
+            if isinstance(policy, ForecastGatedPolicy):
+                assert policy.cost_coef is not None, (
+                    "streaming a ForecastGatedPolicy needs explicit demand->"
+                    "cost coefficients: build it with forecast_fleet_policy/"
+                    "forecast_topology_policy (or pass cost_coef= to "
+                    "forecast_gated_policy)"
+                )
+                if forecaster is not None:
+                    self.pred_source = "live"
+                    self._fc = {
+                        "params": jax.tree.map(jnp.asarray, forecaster.params),
+                        "scale": jnp.asarray(forecaster.scale, jnp.float64),
+                    }
+                    self._forecaster = forecaster
+                else:
+                    self.pred_source = "replay"
+                    assert policy.pred_demand.ndim == 2, (
+                        "replay mode indexes pred_demand columns per tick — "
+                        "expected a (rows, T) prediction matrix"
+                    )
+            else:
+                assert forecaster is None, (
+                    "forecaster= only applies to a ForecastGatedPolicy"
+                )
+
+            self.hours_per_month = int(hours_per_month)
+            self.hbuf = int(np.max(np.asarray(arrays.toggle.h))) + 1
+            self.n_rows = arrays.toggle.theta1.shape[0]
+            self.n_demand_rows = (
+                arrays.n_pairs if self.topology else self.n_rows
+            )
+            self._h_np = np.asarray(arrays.toggle.h, np.int64)
+            self._rows_idx = np.arange(self.n_rows)
+            self.reset()
+
+    def _step_fn(self, endo: bool):
+        key = (self.topology, self.pred_source, endo)
+        fn = _STEP_CACHE.get(key)
+        if fn is None:
+            fn = _STEP_CACHE.setdefault(key, jax.jit(_build_step(*key)))
+        return fn
+
+    def reset(self) -> None:
+        """Rewind to tick 0 (fresh carry; operands and policy unchanged)."""
+        with enable_x64():
+            fsm = jax.vmap(lambda p: p.init_carry())(self.policy)
+            t_dev = jnp.int32(0)
+        M, P = self.n_rows, self.n_demand_rows
+        z = lambda *s: np.zeros(s, np.float64)
+        if self.pred_source == "live":
+            ssm_h = jnp.asarray(self._forecaster.h0, jnp.float32)
+            pred_live = np.asarray(self._forecaster.pred0, np.float64)
+        else:
+            ssm_h = jnp.zeros((M, 0), jnp.float32)
+            pred_live = z(M)
+        self._state = RuntimeState(
+            t=0,
+            fsm=fsm,
+            ssm_h=ssm_h,
+            t_dev=t_dev,
+            dcum=z(P),
+            dcum_month=z(P),
+            vpn_pref=z(M),
+            cci_pref=z(M),
+            ring_vpn=z(M, self.hbuf),
+            ring_cci=z(M, self.hbuf),
+            pred_live=pred_live,
+        )
+
+    @property
+    def t(self) -> int:
+        return int(self._state.t)
+
+    def step(self, demand_t, *, cci_demand_t=None) -> Dict[str, np.ndarray]:
+        """Advance one hour. ``demand_t``: (rows,) GB billed on the VPN path
+        this hour (per pair in topology mode); ``cci_demand_t`` optionally
+        prices the CCI counterfactual on its own volume (endogenous demand —
+        the two paths carry differently-compressed traffic). Returns this
+        hour's per-row decision/cost arrays; the FSM state that SERVES the
+        hour is ``out["state"]`` (map it with :func:`modes`)."""
+        st = self._state
+        t = st.t
+        M, P = self.n_rows, self.n_demand_rows
+        # Host-side sequential reductions (see RuntimeState: numpy float64
+        # keeps these bit-identical to the offline np.cumsum prefixes).
+        if t % self.hours_per_month == 0:
+            st.dcum_month[:] = st.dcum
+        month_cum = st.dcum - st.dcum_month
+        lo = np.maximum(0, t - self._h_np)
+        r_vpn = st.vpn_pref - st.ring_vpn[self._rows_idx, lo % self.hbuf]
+        r_cci = st.cci_pref - st.ring_cci[self._rows_idx, lo % self.hbuf]
+
+        d = np.asarray(demand_t, np.float64)
+        assert d.shape == (P,), (d.shape, P)
+        endo = cci_demand_t is not None
+        parts = [d]
+        if endo:
+            parts.append(np.asarray(cci_demand_t, np.float64))
+        parts += [month_cum, r_vpn, r_cci]
+        if self.pred_source == "live":
+            parts.append(st.pred_live)
+        with enable_x64():
+            fsm, ssm_h, t_dev, packed_out = self._step_fn(endo)(
+                self.arrays, self.policy, self._fc, st.fsm, st.ssm_h,
+                st.t_dev, jax.device_put(np.concatenate(parts)),
+            )
+        po = np.asarray(packed_out)
+        x = po[0:M].astype(np.int64)
+        state = po[M:2 * M].astype(np.int64)
+        vpn_t = po[2 * M:3 * M]
+        cci_t = po[3 * M:4 * M]
+        d_pair = po[4 * M:4 * M + P]
+
+        # Commit this tick: ring slots take pref[t] BEFORE the prefixes
+        # absorb this hour's costs (the exclusive-prefix convention).
+        slot = t % self.hbuf
+        st.ring_vpn[:, slot] = st.vpn_pref
+        st.ring_cci[:, slot] = st.cci_pref
+        np.add(st.vpn_pref, vpn_t, out=st.vpn_pref)
+        np.add(st.cci_pref, cci_t, out=st.cci_pref)
+        np.add(st.dcum, d_pair, out=st.dcum)
+        self._state = st._replace(
+            t=t + 1, fsm=fsm, ssm_h=ssm_h, t_dev=t_dev,
+            pred_live=(
+                po[4 * M + P:5 * M + P] if self.pred_source == "live"
+                else st.pred_live
+            ),
+        )
+        return {
+            "x": x,                        # (rows,) 0/1 — CCI serving this hour
+            "state": state,                # (rows,) FSM state codes
+            "r_vpn": r_vpn,
+            "r_cci": r_cci,
+            "vpn_cost": vpn_t,             # this hour's counterfactual costs
+            "cci_cost": cci_t,
+            "cost": np.where(x == 1, cci_t, vpn_t),
+        }
+
+    def run(self, demand, *, cci_demand=None) -> Dict[str, np.ndarray]:
+        """Convenience: stream a whole (rows, T) matrix tick by tick and stack
+        the outputs into the offline planners' (rows, T) layout."""
+        demand = np.asarray(demand)
+        outs = []
+        for t in range(demand.shape[1]):
+            outs.append(self.step(
+                demand[:, t],
+                cci_demand_t=None if cci_demand is None else cci_demand[:, t],
+            ))
+        return {
+            k: np.stack([np.asarray(o[k]) for o in outs], axis=1) for k in outs[0]
+        }
+
+    def modes(self, out) -> list:
+        """Map one step's FSM states to per-row collective modes."""
+        return [collective_mode(int(s)) for s in np.asarray(out["state"])]
+
+
+# ---------------------------------------------------------------------------
+# Actuation: the endogenous-demand planner over the runtime
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FleetPlannerReport:
+    hours: int
+    total_cost: float
+    cost_always_vpn: float
+    cost_always_cci: float
+    on_fraction: np.ndarray        # (N,) fraction of hours on the leased link
+    total_gb: float
+    link_cost: np.ndarray          # (N,) realized cost per link
+
+
+class ElasticFleetPlanner:
+    """N-link :class:`repro.core.planner.InterconnectPlanner`.
+
+    feed_hour(bytes) per tick; per-link FSM modes actuate the collective
+    layer (``'hierarchical'`` over the leased link at full precision,
+    ``'compressed'`` int8+error-feedback on the pay-per-GB path), and each
+    mode's counterfactual is priced on ITS OWN demand shape: the VPN path
+    carries ~4x fewer billed GB (the endogenous loop — pricing both on the
+    served volume creates the hysteresis trap documented in core.planner).
+    """
+
+    COMPRESS_RATIO = COMPRESS_RATIO
+
+    def __init__(self, fleet, *, compress_ratio: Optional[float] = None, **runtime_kw):
+        self.runtime = FleetRuntime(fleet, **runtime_kw)
+        assert not self.runtime.topology, (
+            "ElasticFleetPlanner drives per-link fleets; plan topologies "
+            "offline and stream them with FleetRuntime directly"
+        )
+        self.compress_ratio = float(compress_ratio or COMPRESS_RATIO)
+        n = self.runtime.n_rows
+        self.cost = np.zeros(n)
+        self.cost_vpn_only = np.zeros(n)
+        self.cost_cci_only = np.zeros(n)
+        self.gb = np.zeros(n)
+        self.on_hours = np.zeros(n, np.int64)
+
+    def feed_hour(self, cross_pod_bytes) -> list:
+        """Account one hour of per-link cross-pod traffic (bytes, (N,)).
+        Returns each link's collective mode for the hour just served."""
+        raw_gb = np.asarray(cross_pod_bytes, np.float64) / 1e9
+        out = self.runtime.step(
+            raw_gb / self.compress_ratio, cci_demand_t=raw_gb
+        )
+        x = np.asarray(out["x"])
+        on = x == 1
+        vpn_c = np.asarray(out["vpn_cost"])
+        cci_c = np.asarray(out["cci_cost"])
+        self.cost += np.where(on, cci_c, vpn_c)
+        self.cost_vpn_only += vpn_c
+        self.cost_cci_only += cci_c
+        self.gb += np.where(on, raw_gb, raw_gb / self.compress_ratio)
+        self.on_hours += on
+        return self.runtime.modes(out)
+
+    def report(self) -> FleetPlannerReport:
+        h = self.runtime.t
+        return FleetPlannerReport(
+            hours=h,
+            total_cost=float(self.cost.sum()),
+            cost_always_vpn=float(self.cost_vpn_only.sum()),
+            cost_always_cci=float(self.cost_cci_only.sum()),
+            on_fraction=self.on_hours / max(1, h),
+            total_gb=float(self.gb.sum()),
+            link_cost=self.cost.copy(),
+        )
+
+
+def streaming_forecast_policy(
+    arrays,
+    history,
+    *,
+    margin=0.05,
+    hours_per_month: int = 730,
+    renew_in_chunks: bool = False,
+    **train_kw,
+):
+    """Build a live-mode forecast policy + its streaming forecaster.
+
+    Fully causal: the SSM head trains on the (rows, H) ``history`` block and
+    the demand→cost coefficients are fitted on history-derived cost series —
+    nothing about the live horizon is needed up front. Returns ``(policy,
+    forecaster)`` for ``FleetRuntime(..., policy=policy,
+    forecaster=forecaster)``. ``arrays`` may be fleet or (routed) topology
+    arrays; topology histories are per PAIR and aggregated here exactly as
+    the engine aggregates demand.
+    """
+    from .engine import fleet_cost_series, topology_cost_series
+    from .policy import fit_cost_coef, forecast_gated_policy, forecast_horizon_hours
+
+    history = np.asarray(history, np.float64)
+    window = forecast_horizon_hours(arrays.toggle)
+    with enable_x64():
+        hist = jnp.asarray(history, jnp.float64)
+        if isinstance(arrays, TopologyArrays):
+            _, d_row, vpn, cci, _ = topology_cost_series(
+                arrays, hist, hours_per_month=hours_per_month
+            )
+        else:
+            d_row, vpn, cci = fleet_cost_series(
+                arrays, hist, hours_per_month=hours_per_month
+            )
+        coef = fit_cost_coef(d_row, vpn, cci)
+        agg = np.asarray(d_row)
+    fc = StreamingForecaster.fit(agg, window, **train_kw)
+    rows = agg.shape[0]
+    policy = forecast_gated_policy(
+        arrays.toggle,
+        np.zeros(rows),  # unused in live mode (pred comes from the SSM state)
+        margin=margin,
+        cost_coef=np.asarray(coef),
+        renew_in_chunks=renew_in_chunks,
+    )
+    return policy, fc

@@ -489,21 +489,42 @@ def demand_forecaster_init(key, state_dim: int = 8):
     }
 
 
+def demand_forecaster_step(params, h: jax.Array, u_t: jax.Array):
+    """One recurrent tick of the forecaster: O(1) state, O(S) work.
+
+    ``h`` (N, S) is the EMA-bank state after consuming ``u_{<t}``; ``u_t``
+    (N,) the current log1p-normalized demand. Returns ``(h', y_t)`` with
+    ``y_t`` the readout predicting the window starting at hour ``t+1`` —
+    exactly one column of :func:`demand_forecaster_apply` (the batch form is
+    this step under ``lax.scan``, so the two forms cannot drift; the
+    streaming fleet runtime carries ``h`` as part of its explicit state).
+    """
+    a = jax.nn.sigmoid(params["raw_a"])                       # (S,)
+    h = a * h + (1.0 - a) * u_t[:, None]
+    dev = h - u_t[:, None]                                    # (N, S)
+    y_t = u_t + dev @ params["w"] + params["bias"]
+    return h, y_t
+
+
+def demand_forecaster_state(params, u: jax.Array) -> jax.Array:
+    """Warm-up: the (N, S) recurrent state after consuming all of ``u`` (N, T)
+    — hand this to :func:`demand_forecaster_step` to continue streaming."""
+    h0 = jnp.zeros((u.shape[0], params["raw_a"].shape[0]), jnp.float32)
+    uf = u.astype(jnp.float32)
+    h, _ = jax.lax.scan(lambda h, u_t: demand_forecaster_step(params, h, u_t), h0, uf.T)
+    return h
+
+
 def demand_forecaster_apply(params, u: jax.Array) -> jax.Array:
     """u: (N, T) log1p of mean-normalized demand. Returns y (N, T) where
     ``y[:, t]`` estimates log1p of the mean normalized demand over the
     window starting at hour ``t+1``, using ``u[:, :t+1]`` only."""
-    a = jax.nn.sigmoid(params["raw_a"])                       # (S,)
-
-    def step(h, u_t):                                         # h (N,S), u_t (N,)
-        h = a * h + (1.0 - a) * u_t[:, None]
-        return h, h
-
     uf = u.astype(jnp.float32)
-    h0 = jnp.zeros((u.shape[0], a.shape[0]), jnp.float32)
-    _, hs = jax.lax.scan(step, h0, uf.T)                      # (T, N, S)
-    dev = jnp.moveaxis(hs, 0, 1) - uf[..., None]              # (N, T, S)
-    return uf + dev @ params["w"] + params["bias"]
+    h0 = jnp.zeros((u.shape[0], params["raw_a"].shape[0]), jnp.float32)
+    _, ys = jax.lax.scan(
+        lambda h, u_t: demand_forecaster_step(params, h, u_t), h0, uf.T
+    )                                                         # (T, N)
+    return ys.T
 
 
 def train_demand_forecaster(

@@ -12,7 +12,13 @@ import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.check_regression import check_artifact, find_unlisted, main
+from benchmarks.check_regression import (
+    check_artifact,
+    find_unlisted,
+    main,
+    render_summary_table,
+    write_step_summary,
+)
 
 
 def _write(path, rows):
@@ -64,6 +70,42 @@ def test_unlisted_artifact_fails(tmp_path, baselines, capsys):
     assert "not gated" in capsys.readouterr().out
     assert find_unlisted([art]) == [os.path.abspath(stray)]
     assert main([art, "--baselines", baselines, "--allow-unlisted"]) == 0
+
+
+def test_summary_table_rendering():
+    """The $GITHUB_STEP_SUMMARY table: one row per gated bench with the
+    committed baseline, the measured value, their ratio and a verdict;
+    gate-integrity errors get their own rows."""
+    results = [
+        ("fleet", "link_hours_per_s", 1e6, 1.2e6, True),
+        ("runtime", "link_steps_per_s", 2e6, 5e5, False),
+        ("BENCH_stray.json not gated", None, None, None, False),
+    ]
+    md = render_summary_table(results, scale=0.35, max_regression=0.30)
+    lines = md.splitlines()
+    assert "| bench | metric | baseline | measured | ratio | result |" in lines
+    fleet = next(l for l in lines if l.startswith("| fleet"))
+    assert "1.2" in fleet and "✅ pass" in fleet  # ratio vs UNscaled baseline
+    runtime = next(l for l in lines if l.startswith("| runtime"))
+    assert "0.25" in runtime and "❌ FAIL" in runtime
+    assert any("BENCH_stray.json not gated" in l and "❌" in l for l in lines)
+    assert "0.35" in md and "0.7" in md  # the floor formula is stated
+
+
+def test_summary_written_to_github_step_summary(tmp_path, baselines, monkeypatch):
+    """main() appends the table to $GITHUB_STEP_SUMMARY when set (and stays
+    a no-op without it)."""
+    art = _write(tmp_path / "BENCH_fleet.json", [{"link_hours_per_s": 9.9e5}])
+    summary = tmp_path / "summary.md"
+    monkeypatch.setenv("GITHUB_STEP_SUMMARY", str(summary))
+    assert main([art, "--baselines", baselines]) == 0
+    text = summary.read_text()
+    assert "| fleet | link_hours_per_s |" in text and "✅ pass" in text
+    # Appends (Actions semantics), never truncates earlier step output.
+    assert main([art, "--baselines", baselines]) == 0
+    assert summary.read_text().count("Bench throughput gate") == 2
+    monkeypatch.delenv("GITHUB_STEP_SUMMARY")
+    assert write_step_summary("x") is False
 
 
 def test_check_artifact_floor_math(tmp_path, baselines):

@@ -13,6 +13,13 @@ actuation loop would consume the modes) — and reports
   serving loop pays every simulated hour);
 * ``forecast_link_steps_per_s`` — same loop under the SSM-forecast-gated
   policy in live mode (carried forecaster state);
+* ``topology_port_steps_per_s`` — the SAME streaming loop in topology mode
+  at EQUAL port count (M ports == N links; pair demand folded through the
+  routing-matrix operand each tick), gated via the ``extra_metrics`` entry
+  in ``baselines.json`` — the acceptance bar for the routed-core refactor
+  is that shared-port streaming stays within the regression gate of the
+  fleet-mode number, and a mid-stream ``reroute()`` (a pure operand swap)
+  must not recompile the tick;
 * a decision-equality check of the whole streamed horizon against the
   offline ``plan_fleet`` (the tentpole's bit-exactness contract, enforced
   here on bench-sized workloads too).
@@ -30,7 +37,14 @@ import numpy as np
 
 import jax
 
-from repro.fleet import FleetRuntime, build_fleet_scenario, plan_fleet, streaming_forecast_policy
+from repro.fleet import (
+    FleetRuntime,
+    build_fleet_scenario,
+    build_topology_scenario,
+    optimize_routing,
+    plan_fleet,
+    streaming_forecast_policy,
+)
 
 from ._util import save_rows, write_bench_artifact
 
@@ -83,6 +97,30 @@ def run(n_links: int = 1024, ticks: int = 3000, *, history: int = 600, seed: int
     )
     f_per_tick = _time_stream(frt, cols)
 
+    # Topology mode at EQUAL port count: M ≈ n_links ports sharing leases
+    # over P = M pairs, the routing matrix a per-tick traced operand
+    # (rounded down to the facility granularity for odd --links values).
+    n_eq = 2 * max(1, n_links // 2)
+    tsc = build_topology_scenario(
+        n_eq, n_facilities=max(1, n_eq // 2), ports_per_facility=2,
+        horizon=ticks, seed=seed,
+    )
+    routing = optimize_routing(tsc.topo, tsc.demand)
+    trt = FleetRuntime(tsc.topo, routing=routing)
+    assert trt.n_rows == n_eq, (trt.n_rows, n_eq)
+    tcols = [np.ascontiguousarray(tsc.demand[:, t]) for t in range(ticks)]
+    t_per_tick = _time_stream(trt, tcols)
+    # A live reroute is a pure operand swap: the next tick must reuse the
+    # compiled step (measured as one tick, not a recompile pause).
+    trt.reroute(routing)
+    t0 = time.perf_counter()
+    jax.block_until_ready(trt.step(tcols[0])["x"])
+    reroute_tick_s = time.perf_counter() - t0
+    assert reroute_tick_s < max(50 * t_per_tick, 0.25), (
+        f"post-reroute tick took {reroute_tick_s:.3f}s — the routing swap "
+        "must not trigger a recompile"
+    )
+
     rows = [{
         "links": n_links,
         "ticks": ticks,
@@ -92,12 +130,18 @@ def run(n_links: int = 1024, ticks: int = 3000, *, history: int = 600, seed: int
         "forecast_tick_us": f_per_tick * 1e6,
         "forecaster_train_s": train_s,
         "bit_exact_vs_offline": exact,
+        "topology_ports": trt.n_rows,
+        "topology_pairs": trt.n_demand_rows,
+        "topology_port_steps_per_s": trt.n_rows / t_per_tick,
+        "topology_tick_us": t_per_tick * 1e6,
+        "reroute_tick_us": reroute_tick_s * 1e6,
     }]
     save_rows("runtime", rows)
     derived = (
         f"link_steps_per_s={rows[0]['link_steps_per_s']:.3g} "
         f"tick_us={rows[0]['tick_us']:.1f} "
-        f"forecast={rows[0]['forecast_link_steps_per_s']:.3g}/s"
+        f"forecast={rows[0]['forecast_link_steps_per_s']:.3g}/s "
+        f"topology={rows[0]['topology_port_steps_per_s']:.3g}/s"
     )
     return rows, derived
 
@@ -123,7 +167,9 @@ def main() -> None:
         f"runtime: {r['links']} links streamed {r['ticks']} ticks -> "
         f"{r['link_steps_per_s']:.3g} link-steps/s "
         f"({r['tick_us']:.1f} us/tick; forecast-gated "
-        f"{r['forecast_link_steps_per_s']:.3g}/s), "
+        f"{r['forecast_link_steps_per_s']:.3g}/s; topology mode "
+        f"{r['topology_port_steps_per_s']:.3g} port-steps/s at "
+        f"{r['topology_ports']} ports / {r['topology_pairs']} pairs), "
         f"bit-exact vs offline: {r['bit_exact_vs_offline']}"
     )
     print(derived)

@@ -48,8 +48,15 @@ class GateError(Exception):
 
 
 def check_artifact(path: str, baselines: dict, *, scale: float, max_regression: float):
-    """Returns (name, metric, value, floor, ok); raises GateError with a
-    clear message on missing baselines / malformed artifacts."""
+    """Returns a LIST of (name, metric, committed, value, floor, ok) — one
+    row per gated metric; raises GateError with a clear message on missing
+    baselines / malformed artifacts.
+
+    A baseline entry gates its primary ``metric``/``value`` pair and any
+    additional ``extra_metrics`` (a ``{metric: baseline_value}`` dict) — so
+    one artifact can carry several gated numbers (e.g. the runtime bench's
+    fleet-mode AND topology-mode throughputs) without a second bench job.
+    """
     name = re.sub(r"^BENCH_|\.json$", "", os.path.basename(path))
     if name not in baselines:
         raise GateError(
@@ -59,7 +66,9 @@ def check_artifact(path: str, baselines: dict, *, scale: float, max_regression: 
             f'a "{name}" entry to benchmarks/baselines.json'
         )
     base = baselines[name]
-    metric, committed = base["metric"], float(base["value"])
+    metrics = {base["metric"]: float(base["value"])}
+    for m, v in base.get("extra_metrics", {}).items():
+        metrics[m] = float(v)
     try:
         with open(path) as f:
             rows = json.load(f)
@@ -70,14 +79,17 @@ def check_artifact(path: str, baselines: dict, *, scale: float, max_regression: 
         )
     except json.JSONDecodeError as e:
         raise GateError(f"{path}: malformed artifact JSON ({e})")
-    if not rows or metric not in rows[0]:
-        raise GateError(
-            f"{path}: artifact rows carry no {metric!r} metric (baseline "
-            f"for {name!r} gates on it); keys: {sorted(rows[0]) if rows else []}"
-        )
-    value = float(rows[0][metric])
-    floor = committed * scale * (1.0 - max_regression)
-    return name, metric, value, floor, value >= floor
+    results = []
+    for metric, committed in metrics.items():
+        if not rows or metric not in rows[0]:
+            raise GateError(
+                f"{path}: artifact rows carry no {metric!r} metric (baseline "
+                f"for {name!r} gates on it); keys: {sorted(rows[0]) if rows else []}"
+            )
+        value = float(rows[0][metric])
+        floor = committed * scale * (1.0 - max_regression)
+        results.append((name, metric, committed, value, floor, value >= floor))
+    return results
 
 
 def render_summary_table(results, *, scale: float, max_regression: float) -> str:
@@ -164,7 +176,7 @@ def main(argv=None) -> int:
     results = []
     for path in args.artifacts:
         try:
-            name, metric, value, floor, ok = check_artifact(
+            checked = check_artifact(
                 path, baselines,
                 scale=args.scale, max_regression=args.max_regression,
             )
@@ -173,14 +185,15 @@ def main(argv=None) -> int:
             results.append((str(e), None, None, None, False))
             failed = True
             continue
-        verdict = "ok" if ok else "REGRESSION"
-        print(
-            f"{name}: {metric}={value:.3g} vs floor {floor:.3g} "
-            f"(baseline x {args.scale:g} scale, -{100 * args.max_regression:.0f}%) "
-            f"-> {verdict}"
-        )
-        results.append((name, metric, float(baselines[name]["value"]), value, ok))
-        failed |= not ok
+        for name, metric, committed, value, floor, ok in checked:
+            verdict = "ok" if ok else "REGRESSION"
+            print(
+                f"{name}: {metric}={value:.3g} vs floor {floor:.3g} "
+                f"(baseline x {args.scale:g} scale, -{100 * args.max_regression:.0f}%) "
+                f"-> {verdict}"
+            )
+            results.append((name, metric, committed, value, ok))
+            failed |= not ok
 
     unlisted = find_unlisted(args.artifacts)
     if unlisted and not args.allow_unlisted:

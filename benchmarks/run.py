@@ -15,6 +15,7 @@ from . import (
     bench_bursty,
     bench_constant,
     bench_fleet,
+    bench_kernels,
     bench_measurements,
     bench_mirage,
     bench_planner,
@@ -53,6 +54,10 @@ BENCHES = [
     ("runtime_streaming", lambda: bench_runtime.run(
         512 if FAST else 2048, 600 if FAST else 3000,
         history=300 if FAST else 600,
+    )),
+    ("kernels_tiered_cost", lambda: bench_kernels.run(
+        8 if FAST else 128, 1024 if FAST else 8704,
+        repeats=2 if FAST else 5,
     )),
     ("roofline_e10", lambda: bench_roofline.run()),
 ]

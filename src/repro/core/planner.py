@@ -221,13 +221,17 @@ class InterconnectPlanner:
 
 
 def fleet_planner(fleet, **kw):
-    """N-link generalization of :class:`InterconnectPlanner`.
+    """N-row generalization of :class:`InterconnectPlanner`.
 
     Returns a :class:`repro.fleet.runtime.ElasticFleetPlanner`: the same
-    feed-bytes/actuate-modes contract, but every link stepped in ONE jitted
+    feed-bytes/actuate-modes contract, but every row stepped in ONE jitted
     vmapped tick through the pluggable policy layer (reactive by default).
-    Lives behind a factory so core keeps no import edge onto the fleet
-    subsystem (which already imports core).
+    Pass a ``FleetSpec`` for per-link actuation, or a ``TopologySpec`` plus
+    ``routing=`` for per-PORT mode — shared CCI leases priced through the
+    routed core, per-pair modes actuating multi-pair ``fleet_sync_grads``
+    groups (one leased sync domain per shared port). Lives behind a factory
+    so core keeps no import edge onto the fleet subsystem (which already
+    imports core).
     """
     from repro.fleet.runtime import ElasticFleetPlanner
 

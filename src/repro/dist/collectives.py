@@ -126,23 +126,59 @@ def sync_wire_bytes(grads, mode: str) -> int:
     return total
 
 
-def fleet_sync_grads(grads_per_link, mesh, modes, err_states=None):
-    """Actuate a fleet plan: link ``i``'s gradients sync under ``modes[i]``.
+def fleet_sync_grads(grads_per_link, mesh, modes, err_states=None, *, groups=None):
+    """Actuate a fleet plan: job ``i``'s gradients sync under ``modes[i]``.
 
     The bridge between :class:`repro.fleet.runtime.ElasticFleetPlanner` and
-    the collective layer: each training job (one per interconnect link)
-    syncs hierarchically at full precision while its leased link is ON, and
-    int8-compressed over the pay-per-GB path otherwise. Returns
-    ``(synced, err_states, billed_bytes)`` lists; feed ``billed_bytes`` (x
-    steps/hour) back as the planner's next-hour demand to close the
-    endogenous loop.
+    the collective layer: each training job (one per interconnect link, or
+    one per region PAIR in per-port topology mode) syncs hierarchically at
+    full precision while its leased link is ON, and int8-compressed over the
+    pay-per-GB path otherwise. Returns ``(synced, err_states, billed_bytes)``
+    lists; feed ``billed_bytes`` (x steps/hour) back as the planner's
+    next-hour demand to close the endogenous loop.
+
+    ``groups`` (optional, one hashable id per job — e.g.
+    ``ElasticFleetPlanner.sync_groups()``'s routed-port indices) declares
+    leased sync DOMAINS: jobs sharing a group id and mode are synced in ONE
+    ``sync_grads`` call (their pytrees batched into a list), so pairs
+    attached to the same leased CCI port share one collective launch over
+    the shared physical link instead of one per pair. Results are
+    numerically identical to the ungrouped path (the mesh average is per
+    leaf), and wire bytes stay metered PER JOB via :func:`sync_wire_bytes`
+    — the per-pair billing the topology pricing model needs.
     """
-    assert len(grads_per_link) == len(modes), (len(grads_per_link), len(modes))
-    err_states = err_states or [None] * len(grads_per_link)
-    synced, errs, billed = [], [], []
-    for grads, mode, err in zip(grads_per_link, modes, err_states):
-        out, new_err = sync_grads(grads, mesh, mode=mode, err_state=err)
-        synced.append(out)
-        errs.append(new_err)
-        billed.append(sync_wire_bytes(grads, mode))
+    n = len(grads_per_link)
+    assert n == len(modes), (n, len(modes))
+    err_states = err_states or [None] * n
+    if groups is None:
+        domains = [(i,) for i in range(n)]
+    else:
+        assert len(groups) == n, (len(groups), n)
+        by_key: dict = {}
+        for i, (g, m) in enumerate(zip(groups, modes)):
+            by_key.setdefault((g, m), []).append(i)
+        domains = [tuple(v) for v in by_key.values()]
+    synced = [None] * n
+    errs = [None] * n
+    billed = [None] * n
+    for idx in domains:
+        mode = modes[idx[0]]
+        dom_errs = [err_states[i] for i in idx]
+        if all(e is None for e in dom_errs):
+            dom_errs = None
+        else:
+            # A domain can mix carried and fresh jobs after a re-route:
+            # fresh jobs start from zero residuals, carried ones keep theirs.
+            dom_errs = [
+                e if e is not None else init_error_state(grads_per_link[i], mesh)
+                for e, i in zip(dom_errs, idx)
+            ]
+        out, new_err = sync_grads(
+            [grads_per_link[i] for i in idx], mesh, mode=mode,
+            err_state=dom_errs,
+        )
+        for k, i in enumerate(idx):
+            synced[i] = out[k]
+            errs[i] = new_err[k] if new_err is not None else None
+            billed[i] = sync_wire_bytes(grads_per_link[i], mode)
     return synced, errs, billed

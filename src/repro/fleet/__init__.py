@@ -54,13 +54,14 @@ Quick start::
     print(build_topology_report(ts, tplan, routing).render_text())
 """
 from .engine import (  # noqa: F401
-    fleet_cost_series,
+    RoutedSeries,
     fleet_oracle,
     plan_fleet,
     plan_fleet_reference,
     plan_topology,
     plan_topology_reference,
-    topology_cost_series,
+    replay_plan_topology,
+    routed_cost_series,
     topology_oracle,
     topology_port_costs_reference,
 )
@@ -102,6 +103,7 @@ from .scenario import (  # noqa: F401
     FleetScenario,
     TopologyScenario,
     build_fleet_scenario,
+    build_reroute_scenario,
     build_topology_scenario,
     link_capacity_gb_hr,
     port_capacity_gb_hr,

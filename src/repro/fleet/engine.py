@@ -1,29 +1,32 @@
-"""Batched fleet planning: one jitted, vmapped toggle policy over N links.
+"""Routed execution core: ONE batched planning pipeline for fleets and
+topologies.
 
-The per-link pipeline, entirely inside ONE jit call:
+Every planner runs the same three stages, entirely inside ONE jit call:
 
-  demand (N, T) --clip at per-link capacity--> d
-  d --monthly_cumsum + batched tiered tables--> vpn/cci hourly costs (N, T)
-  costs --vmap(policy_scan) over the link axis--> x, state, totals
+  pair stage   demand (P, T) --clip at pair/link capacity--> d
+               d --monthly_cumsum + batched tiered tables--> per-pair VPN costs
+  route stage  pairs fold onto decision rows through the one-hot routing
+               matrix (a traceable operand — re-routing reuses the compiled
+               program); identity routing (``plan_fleet``) skips the matmul
+               but prices through the SAME formula, so the per-link planner
+               is literally the identity-routing special case of the
+               shared-port planner (bit-exact, property-tested)
+  policy stage costs --vmap(policy_scan) over the row axis--> x, state, totals
 
 The toggle decision is a pluggable *policy operand* (:mod:`repro.fleet.policy`):
 the paper's reactive ToggleCCI by default, or SSM-forecast-gated /
 hysteresis variants — all through the same compiled scan, the policy pytree
 vmapped alongside the cost rows.
 
-Everything the per-link paper pipeline did in Python loops (cost series,
-window sums, FSM) is a single XLA program here; planning 100 links x 8760
-hours is one device dispatch (see ``benchmarks/bench_fleet.py`` for the
-link-hours/second numbers).
+:func:`routed_cost_series` is the single pricing+aggregation entry point —
+the offline planners, the forecast-policy factories and the streaming
+runtime (:mod:`repro.fleet.runtime`) all consume it, so their cost series
+cannot drift apart (the streaming-vs-offline bit-exactness contract).
+:func:`replay_plan_topology` replays a PIECEWISE-CONSTANT routing schedule
+offline — the oracle for :meth:`repro.fleet.runtime.FleetRuntime.reroute`'s
+mid-stream routing swaps.
 
-The topology pipeline (:func:`plan_topology`) adds one aggregation stage:
-per-pair demand/VPN costs are folded onto candidate CCI ports through a
-one-hot routing matrix (a traceable operand — re-routing reuses the
-compiled program), and the SAME two-level vmapped scan (ports x hours)
-then toggles each port on its port-aggregated window costs. The identity
-routing collapses this to the per-link pipeline exactly.
-
-Precision: both engines run under ``jax.experimental.enable_x64`` so prefix
+Precision: everything runs under ``jax.experimental.enable_x64`` so prefix
 sums over year-long horizons accumulate in float64 — the batched decision
 sequences ``x`` then match the float64 numpy references
 (:func:`repro.core.togglecci.run_togglecci`) bit-for-bit
@@ -31,7 +34,7 @@ sequences ``x`` then match the float64 numpy references
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence, Union
+from typing import Dict, NamedTuple, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -49,7 +52,7 @@ from repro.kernels.tiered_cost import tiered_cost_batched
 
 from .policy import make_policy, policy_scan
 from .spec import FleetArrays, FleetSpec
-from .topology import TopologyArrays, TopologySpec, optimize_routing
+from .topology import TopologyArrays, TopologySpec, optimize_routing, routing_matrix
 
 _JIT_CACHE: dict = {}
 
@@ -82,22 +85,29 @@ def _plan_outputs(policy, d, vpn, cci) -> Dict[str, jax.Array]:
     }
 
 
-def fleet_cost_series(
-    arrays: FleetArrays,
-    demand: jax.Array,
-    *,
-    hours_per_month: int,
-    use_pallas: bool = False,
-):
-    """The pricing stage of :func:`plan_fleet`: ``(d, vpn, cci)`` hourly series.
+class RoutedSeries(NamedTuple):
+    """The unified pricing+aggregation output both planners toggle on.
 
-    Split out so the forecast-policy factories and the streaming runtime
-    (:mod:`repro.fleet.runtime`) consume EXACTLY the series the offline
-    planner toggles on — any drift between them would break the
-    streaming-vs-offline bit-exactness contract.
+    ``pair_demand`` is per pair/link (P rows); everything else is per
+    DECISION row (M ports in topology mode, M == P links in fleet mode —
+    where ``row_demand is pair_demand`` and ``n_pairs`` is all-ones).
     """
+
+    pair_demand: jax.Array  # (P, T) access/capacity-clipped demand
+    row_demand: jax.Array   # (M, T) demand the decision rows see
+    vpn: jax.Array          # (M, T) hourly VPN counterfactual
+    cci: jax.Array          # (M, T) hourly CCI counterfactual
+    n_pairs: jax.Array      # (M,) pairs attached per row
+
+
+def _pair_stage(arrays, demand: jax.Array, *, hours_per_month: int,
+                use_pallas: bool = False):
+    """Per-pair clip + tiered VPN pricing — identical for both routings
+    (a fleet's link IS a pair riding a private port)."""
     f = jnp.result_type(float)
-    d = jnp.minimum(demand.astype(f), arrays.capacity[:, None])  # (N, T)
+    topology = isinstance(arrays, TopologyArrays)
+    cap = arrays.pair_capacity if topology else arrays.capacity
+    d = jnp.minimum(demand.astype(f), cap[:, None])                   # (P, T)
     month_cum = monthly_cumsum(d, hours_per_month)
     if use_pallas:
         # f32 kernel path: pad T to a block multiple (zero demand rows
@@ -118,21 +128,99 @@ def fleet_cost_series(
         vpn_transfer = tiered_marginal_cost_tables(
             month_cum, d, arrays.tier_bounds, arrays.tier_rates
         )
-    vpn = arrays.L_vpn[:, None] + vpn_transfer
-    cci = (arrays.L_cci + arrays.V_cci)[:, None] + arrays.c_cci[:, None] * d
-    return d, vpn, cci
+    return d, arrays.L_vpn[:, None] + vpn_transfer
+
+
+def _route_stage(arrays, routing, d_pair, vpn_pair):
+    """Fold pairs onto decision rows and price the CCI counterfactual.
+
+    ``routing=None`` is the identity fast path (fleet mode): no aggregation,
+    one pair per row. The CCI formula ``L + V·n + c·d`` with ``n = 1`` is
+    bit-identical to the historical per-link ``(L + V) + c·d`` — the
+    refactor's safety net, asserted by the identity-routing property test.
+    VPN rides the public internet, so only the CCI volume sees the port's
+    hard capacity (linksim F1); the lease is paid once, attachments per pair.
+
+    Aggregation is a ``segment_sum`` in ascending-PAIR order, NOT a dense
+    matmul with the one-hot matrix: XLA's blocked f64 dot reductions are
+    shape-dependent (an (M,P)@(P,T) matmul and the streaming tick's matvec
+    disagree in the last ulp past ~64 ports), while scatter-add accumulates
+    sequentially in update order — bit-identical between the full-horizon
+    offline plan, per-tick streaming columns, and the python float64
+    reference loop (measured across shapes up to 2048x2048), and O(P·T)
+    instead of O(M·P·T) on top.
+    """
+    if routing is None:
+        d_row, vpn = d_pair, vpn_pair
+        n_pairs = jnp.ones_like(arrays.L_cci)
+    else:
+        idx = jnp.argmax(routing, axis=0)                             # (P,)
+        M = arrays.L_cci.shape[0]
+        seg = lambda v: jax.ops.segment_sum(v, idx, num_segments=M)
+        vpn = seg(vpn_pair)                                           # (M, T)
+        d_row = jnp.minimum(seg(d_pair), arrays.port_capacity[:, None])
+        n_pairs = seg(jnp.ones(d_pair.shape[0], d_pair.dtype))        # (M,)
+    cci = (
+        arrays.L_cci[:, None]
+        + (arrays.V_cci * n_pairs)[:, None]
+        + arrays.c_cci[:, None] * d_row
+    )
+    return d_row, vpn, cci, n_pairs
+
+
+def routed_cost_series(
+    arrays: Union[FleetArrays, TopologyArrays],
+    demand: jax.Array,
+    *,
+    hours_per_month: int,
+    use_pallas: bool = False,
+) -> RoutedSeries:
+    """THE pricing stage: pair costs folded through the routing.
+
+    One function for both array kinds — :class:`FleetArrays` take the
+    identity fast path, :class:`TopologyArrays` aggregate through their
+    ``routing`` operand. Shared by the offline plan builder, the
+    forecast-policy factories and the streaming runtime, so every consumer
+    toggles on EXACTLY the same series (the bit-exactness contract).
+    """
+    d_pair, vpn_pair = _pair_stage(
+        arrays, demand, hours_per_month=hours_per_month, use_pallas=use_pallas
+    )
+    routing = arrays.routing if isinstance(arrays, TopologyArrays) else None
+    d_row, vpn, cci, n_pairs = _route_stage(arrays, routing, d_pair, vpn_pair)
+    return RoutedSeries(d_pair, d_row, vpn, cci, n_pairs)
 
 
 def _build_plan_fn(hours_per_month: int, use_pallas: bool):
-    def plan(
-        arrays: FleetArrays, demand: jax.Array, policy
-    ) -> Dict[str, jax.Array]:
-        d, vpn, cci = fleet_cost_series(
-            arrays, demand, hours_per_month=hours_per_month, use_pallas=use_pallas
+    """The ONE shared plan builder: pricing + routing + policy scan.
+
+    One function serves both array kinds (jax.jit caches per input
+    structure); ``plan_fleet``/``plan_topology`` are thin wrappers that
+    resolve specs/routings/policies and call this.
+    """
+
+    def plan(arrays, demand: jax.Array, policy) -> Dict[str, jax.Array]:
+        s = routed_cost_series(
+            arrays, demand, hours_per_month=hours_per_month,
+            use_pallas=use_pallas,
         )
-        return {**_plan_outputs(policy, d, vpn, cci), "demand": d}
+        return {
+            **_plan_outputs(policy, s.row_demand, s.vpn, s.cci),
+            "pair_demand": s.pair_demand,      # (P, T) access-clipped
+            "port_demand": s.row_demand,       # (M, T) row aggregate
+            "n_pairs": s.n_pairs,              # (M,) attached pairs
+        }
 
     return plan
+
+
+def _run_plan(arrays, demand, policy, hours_per_month: int,
+              use_pallas: bool = False) -> Dict[str, jax.Array]:
+    key = (hours_per_month, use_pallas)
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        fn = _JIT_CACHE.setdefault(key, jax.jit(_build_plan_fn(*key)))
+    return fn(arrays, jnp.asarray(demand, jnp.float64), policy)
 
 
 def plan_fleet(
@@ -146,6 +234,11 @@ def plan_fleet(
 ) -> Dict[str, jax.Array]:
     """Plan the whole portfolio in one jitted vmapped scan.
 
+    The identity-routing wrapper of the shared routed core: one link = one
+    pair on a private port, no aggregation matmul, same pricing formula —
+    bit-for-bit the historical per-link planner (property-tested against
+    :func:`plan_fleet_reference`).
+
     Args:
       fleet: a :class:`FleetSpec` (stacked here, under x64) or pre-stacked
         :class:`FleetArrays`.
@@ -156,7 +249,8 @@ def plan_fleet(
         paper's ToggleCCI, bit-for-bit the pre-policy-layer behavior).
       hours_per_month: billing calendar (taken from the spec when given).
     Returns:
-      dict of per-link arrays — see ``_build_plan_fn``.
+      dict of per-link arrays — see ``_build_plan_fn`` (plus ``demand``, an
+      alias of ``pair_demand`` kept for the per-link view).
     """
     with enable_x64():
         kind = "reactive"
@@ -170,11 +264,9 @@ def plan_fleet(
             policy = make_policy(
                 kind, arrays.toggle, renew_in_chunks=renew_in_chunks
             )
-        key = (hours_per_month, use_pallas)
-        fn = _JIT_CACHE.get(key)
-        if fn is None:
-            fn = _JIT_CACHE.setdefault(key, jax.jit(_build_plan_fn(*key)))
-        return fn(arrays, jnp.asarray(demand, jnp.float64), policy)
+        out = dict(_run_plan(arrays, demand, policy, hours_per_month, use_pallas))
+        out["demand"] = out["pair_demand"]
+        return out
 
 
 def plan_fleet_reference(
@@ -205,60 +297,6 @@ def plan_fleet_reference(
 # ---------------------------------------------------------------------------
 
 
-def topology_cost_series(
-    arrays: TopologyArrays, demand: jax.Array, *, hours_per_month: int
-):
-    """The pricing + aggregation stages of :func:`plan_topology`.
-
-    Returns ``(d_pair, d_port, vpn, cci, n_pairs)`` — pair-level clipped
-    demand plus the port-aggregated hourly mode costs the port FSM toggles
-    on. Shared with the streaming runtime for the same bit-exactness reason
-    as :func:`fleet_cost_series`.
-    """
-    f = jnp.result_type(float)
-    # Pair stage: VLAN-access clip, per-pair tiered VPN counterfactuals.
-    d = jnp.minimum(demand.astype(f), arrays.pair_capacity[:, None])  # (P, T)
-    month_cum = monthly_cumsum(d, hours_per_month)
-    vpn_transfer = tiered_marginal_cost_tables(
-        month_cum, d, arrays.tier_bounds, arrays.tier_rates
-    )
-    vpn_pair = arrays.L_vpn[:, None] + vpn_transfer                   # (P, T)
-
-    # Aggregation stage: fold pairs onto their routed ports. VPN rides
-    # the public internet, so only the CCI volume sees the port's hard
-    # capacity (linksim F1); the lease is paid once, attachments per pair.
-    R = arrays.routing                                                # (M, P)
-    vpn = R @ vpn_pair                                                # (M, T)
-    d_port = jnp.minimum(R @ d, arrays.port_capacity[:, None])        # (M, T)
-    n_pairs = jnp.sum(R, axis=1)                                      # (M,)
-    cci = (
-        arrays.L_cci[:, None]
-        + (arrays.V_cci * n_pairs)[:, None]
-        + arrays.c_cci[:, None] * d_port
-    )
-    return d, d_port, vpn, cci, n_pairs
-
-
-def _build_topology_plan_fn(hours_per_month: int):
-    def plan(
-        arrays: TopologyArrays, demand: jax.Array, policy
-    ) -> Dict[str, jax.Array]:
-        d, d_port, vpn, cci, n_pairs = topology_cost_series(
-            arrays, demand, hours_per_month=hours_per_month
-        )
-        # Port stage: the SAME shared policy scan as plan_fleet, now over
-        # ports — the policy's cost trend (and the forecaster's demand
-        # features) operate on port-aggregated series.
-        return {
-            **_plan_outputs(policy, d_port, vpn, cci),
-            "pair_demand": d,                  # (P, T) access-clipped
-            "port_demand": d_port,             # (M, T) CCI-clipped aggregate
-            "n_pairs": n_pairs,                # (M,) attached pairs
-        }
-
-    return plan
-
-
 def plan_topology(
     topo: Union[TopologySpec, TopologyArrays],
     demand,
@@ -282,7 +320,7 @@ def plan_topology(
         arrays). ``None`` resolves the spec's ``policy`` kind (default
         reactive — bit-for-bit the pre-policy-layer behavior).
     Returns:
-      dict of per-port arrays — see ``_build_topology_plan_fn``.
+      dict of per-port arrays — see ``_build_plan_fn``.
     """
     with enable_x64():
         kind = "reactive"
@@ -299,13 +337,77 @@ def plan_topology(
             policy = make_policy(
                 kind, arrays.toggle, renew_in_chunks=renew_in_chunks
             )
-        key = ("topology", hours_per_month)
+        return _run_plan(arrays, demand, policy, hours_per_month)
+
+
+def replay_plan_topology(
+    arrays: TopologyArrays,
+    demand,
+    schedule: Sequence[Tuple[int, object]],
+    *,
+    policy=None,
+    hours_per_month: int = 730,
+    renew_in_chunks: bool = False,
+) -> Dict[str, jax.Array]:
+    """Offline replay of a PIECEWISE-CONSTANT routing schedule.
+
+    ``schedule`` is ``[(start_hour, routing), ...]`` with the first start at
+    hour 0 and strictly increasing starts; each ``routing`` is (P,) port
+    indices or an (M, P) one-hot matrix. The port cost/demand series are
+    the hour-by-hour stitch of each segment's ``routed_cost_series`` (the
+    pair stage is routing-independent, so this is exactly what a streaming
+    run that swaps its routing operand at those hours prices), and ONE
+    shared policy scan runs over the stitched series — which makes this the
+    bit-exactness oracle for :meth:`repro.fleet.runtime.FleetRuntime.reroute`:
+    window sums near a swap mix old- and new-routing hours through the same
+    float64 prefixes, and the FSM carry rides across the swap uninterrupted.
+
+    A single-segment schedule ``[(0, routing)]`` reproduces
+    :func:`plan_topology` on that routing bit-for-bit.
+    """
+    assert isinstance(arrays, TopologyArrays), (
+        "replay_plan_topology replays shared-port routings; fleet mode has "
+        "no routing to swap"
+    )
+    starts = [int(s) for s, _ in schedule]
+    assert starts and starts[0] == 0, "schedule must start at hour 0"
+    assert all(a < b for a, b in zip(starts, starts[1:])), (
+        "schedule starts must be strictly increasing"
+    )
+    with enable_x64():
+        demand = jnp.asarray(demand, jnp.float64)
+        T = demand.shape[1]
+        M = arrays.n_ports
+        if policy is None:
+            policy = make_policy(
+                "reactive", arrays.toggle, renew_in_chunks=renew_in_chunks
+            )
+        bounds = starts + [T]
+        segs = []
+        for (a, b), (_, r) in zip(zip(bounds[:-1], bounds[1:]), schedule):
+            r = np.asarray(r)
+            R = (
+                jnp.asarray(r, jnp.float64)
+                if r.ndim == 2
+                else routing_matrix(r, M, jnp.float64)
+            )
+            # Full-horizon plan per routing through the SAME jitted builder
+            # (identical op fusion → identical floats), stitched per hour.
+            seg = _run_plan(
+                arrays._replace(routing=R), demand, policy, hours_per_month
+            )
+            segs.append(
+                {k: seg[k][:, a:b]
+                 for k in ("port_demand", "vpn_hourly", "cci_hourly")}
+            )
+        d_row = jnp.concatenate([s["port_demand"] for s in segs], axis=1)
+        vpn = jnp.concatenate([s["vpn_hourly"] for s in segs], axis=1)
+        cci = jnp.concatenate([s["cci_hourly"] for s in segs], axis=1)
+        key = "replay_outputs"
         fn = _JIT_CACHE.get(key)
         if fn is None:
-            fn = _JIT_CACHE.setdefault(
-                key, jax.jit(_build_topology_plan_fn(hours_per_month))
-            )
-        return fn(arrays, jnp.asarray(demand, jnp.float64), policy)
+            fn = _JIT_CACHE.setdefault(key, jax.jit(_plan_outputs))
+        return fn(policy, d_row, vpn, cci)
 
 
 def _month_cum_np(d: np.ndarray, hours_per_month: int) -> np.ndarray:

@@ -527,13 +527,13 @@ def forecast_fleet_policy(
     ``arrays`` is a :class:`~repro.fleet.spec.FleetArrays`; ``demand``/
     ``history`` are (N, T)/(N, H) GB/hr (clipped at link capacity here, as
     the engine does). The demand→cost coefficients are fitted eagerly on the
-    engine's own cost series (:func:`repro.fleet.engine.fleet_cost_series`)
+    engine's own cost series (:func:`repro.fleet.engine.routed_cost_series`)
     and baked into the policy, so the streaming runtime can gate on them
     without ever seeing the full horizon.
     """
     from jax.experimental import enable_x64
 
-    from .engine import fleet_cost_series
+    from .engine import routed_cost_series
 
     cap = np.asarray(arrays.capacity, np.float64)[:, None]
     clip = lambda d: np.minimum(np.asarray(d, np.float64), cap)
@@ -544,12 +544,12 @@ def forecast_fleet_policy(
         **train_kw,
     )
     with enable_x64():
-        d, vpn, cci = fleet_cost_series(
+        s = routed_cost_series(
             arrays,
             jnp.asarray(demand, jnp.float64),
             hours_per_month=hours_per_month,
         )
-        coef = fit_cost_coef(d, vpn, cci)
+        coef = fit_cost_coef(s.row_demand, s.vpn, s.cci)
     return forecast_gated_policy(
         arrays.toggle, pred, margin=margin, cost_coef=coef,
         renew_in_chunks=renew_in_chunks,
@@ -578,7 +578,7 @@ def forecast_topology_policy(
     """
     from jax.experimental import enable_x64
 
-    from .engine import topology_cost_series
+    from .engine import routed_cost_series
 
     R = np.asarray(arrays.routing, np.float64)
     pair_cap = np.asarray(arrays.pair_capacity, np.float64)[:, None]
@@ -593,12 +593,12 @@ def forecast_topology_policy(
         **train_kw,
     )
     with enable_x64():
-        _, d_port, vpn, cci, _ = topology_cost_series(
+        s = routed_cost_series(
             arrays,
             jnp.asarray(demand, jnp.float64),
             hours_per_month=hours_per_month,
         )
-        coef = fit_cost_coef(d_port, vpn, cci)
+        coef = fit_cost_coef(s.row_demand, s.vpn, s.cci)
     return forecast_gated_policy(
         arrays.toggle, pred, margin=margin, cost_coef=coef,
         renew_in_chunks=renew_in_chunks,

@@ -235,6 +235,7 @@ class TopologyReport:
     refined_routing: Optional[Tuple[int, ...]] = None  # pair-move local search
     refined_cost: Optional[float] = None               # reactive replan, refined routing
     refine_base_cost: Optional[float] = None           # reactive cost, input routing
+    refine_move_mix: Optional[Dict[str, int]] = None   # applied single vs swap moves
 
     @property
     def totals(self) -> Dict[str, float]:
@@ -329,10 +330,16 @@ class TopologyReport:
                 )
             lines.append(line)
         if "refined_cost" in t:
-            lines.append(
+            line = (
                 f"refined routing: ${t['refined_cost']:.0f}  "
                 f"({100 * t['routing_improvement']:+.2f}% vs greedy routing)"
             )
+            if self.refine_move_mix is not None:
+                mix = ", ".join(
+                    f"{k}: {v}" for k, v in sorted(self.refine_move_mix.items())
+                )
+                line += f"  [moves — {mix}]"
+            lines.append(line)
         return "\n".join(lines)
 
 
@@ -393,7 +400,7 @@ def build_topology_report(
         else None
     )
 
-    refined_routing = refined_cost = refine_base_cost = None
+    refined_routing = refined_cost = refine_base_cost = refine_move_mix = None
     if refine:
         r2, info = refine_routing(
             topo,
@@ -417,6 +424,7 @@ def build_topology_report(
         refined_cost = float(np.sum(np.asarray(replanned["toggle_cost"])))
         refined_routing = tuple(int(v) for v in r2)
         refine_base_cost = float(info["cost_before"])
+        refine_move_mix = dict(info["move_mix"])
 
     rows: List[PortReport] = []
     for m, po in enumerate(topo.ports):
@@ -446,4 +454,5 @@ def build_topology_report(
         refined_routing=refined_routing,
         refined_cost=refined_cost,
         refine_base_cost=refine_base_cost,
+        refine_move_mix=refine_move_mix,
     )

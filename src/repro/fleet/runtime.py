@@ -24,7 +24,13 @@ jitted vmapped step, carrying all policy state explicitly:
 
 Two demand routings, mirroring the offline engines: *fleet* (each row one
 link) and *topology* (pair demand folded onto shared CCI ports through the
-routing matrix, pair-level tier state + port-level FSMs).
+routing matrix, pair-level tier state + port-level FSMs). In topology mode
+the routing matrix is part of :class:`RuntimeState` — a swappable traceable
+operand of the compiled tick — and :meth:`FleetRuntime.reroute` swaps it
+MID-STREAM without recompiling or touching any carried state: from the swap
+tick on, decisions are bit-exact vs an offline
+:func:`repro.fleet.engine.replay_plan_topology` that applies the same
+routing at the same hour (property-tested in ``tests/test_fleet_runtime.py``).
 
 On top sits the actuation layer (ROADMAP "elastic serving integration"):
 :class:`ElasticFleetPlanner` is the N-link generalization of
@@ -79,6 +85,13 @@ class RuntimeState(NamedTuple):
     ssm_h: jax.Array        # device: (M, S) live forecaster state ((M, 0) unused)
     t_dev: jax.Array        # device twin of t (transfers cost ~100µs; the
                             # replay index must not pay one per tick)
+    routing: object         # device: (M, P) one-hot routing operand in
+                            # topology mode (None in fleet mode) — swappable
+                            # mid-stream via FleetRuntime.reroute()
+    routing_idx: object     # device: (P,) int32 routed-port index — the
+                            # one-hot's compact twin the tick aggregates
+                            # with (segment_sum in pair order, matching the
+                            # offline engine bit-for-bit); swapped together
     dcum: np.ndarray        # (P,) cumulative clipped billed demand, == full[t]
     dcum_month: np.ndarray  # (P,) dcum at the current month's start
     vpn_pref: np.ndarray    # (M,) exclusive prefix of hourly VPN cost
@@ -142,7 +155,7 @@ def _build_step(topology: bool, pred_source: Optional[str], endo: bool):
     two-shape pricing).
     """
 
-    def step(arrays, policy, fc, fsm, ssm_h, t, packed):
+    def step(arrays, policy, fc, fsm, ssm_h, t, routing_idx, packed):
         f = jnp.result_type(float)
         P = (arrays.pair_capacity if topology else arrays.capacity).shape[0]
         M = arrays.toggle.theta1.shape[0]
@@ -169,18 +182,24 @@ def _build_step(topology: bool, pred_source: Optional[str], endo: bool):
                 arrays.tier_bounds, arrays.tier_rates,
             )[:, 0]
             vpn_pair = arrays.L_vpn + vpn_transfer                    # (P,)
-            R = arrays.routing                                        # (M, P)
-            vpn_t = R @ vpn_pair                                      # (M,)
+            # Aggregate through the RuntimeState's swappable routing
+            # operand (the one-hot matrix's int32 index twin, swapped
+            # together with it by reroute()): segment_sum in ascending-pair
+            # order, the same formulation as the offline _route_stage
+            # (bit-exactness) and O(P) per tick instead of an O(M·P)
+            # dense one-hot matvec.
+            seg = lambda v: jax.ops.segment_sum(v, routing_idx, num_segments=M)
+            vpn_t = seg(vpn_pair)                                     # (M,)
             d_cci = (
                 d_pair if cci_demand_t is None
                 else jnp.minimum(cci_demand_t.astype(f), arrays.pair_capacity)
             )
-            d_bill = jnp.minimum(R @ d_cci, arrays.port_capacity)     # (M,)
-            n_pairs = jnp.sum(R, axis=1)
+            d_bill = jnp.minimum(seg(d_cci), arrays.port_capacity)    # (M,)
+            n_pairs = seg(jnp.ones(P, f))
             cci_t = (
                 arrays.L_cci + arrays.V_cci * n_pairs + arrays.c_cci * d_bill
             )
-            d_row = jnp.minimum(R @ d_pair, arrays.port_capacity)     # (M,)
+            d_row = jnp.minimum(seg(d_pair), arrays.port_capacity)    # (M,)
         else:
             d_pair = jnp.minimum(demand_t.astype(f), arrays.capacity)  # (N,)
             vpn_transfer = tiered_marginal_cost_tables(
@@ -266,6 +285,7 @@ class FleetRuntime:
     ):
         with enable_x64():
             kind = "reactive"
+            self._spec = None
             if isinstance(spec, FleetSpec):
                 hours_per_month = spec.hours_per_month
                 kind = spec.policy
@@ -277,12 +297,14 @@ class FleetRuntime:
                     "a TopologySpec needs an explicit routing (the runtime "
                     "cannot co-optimize it online; run optimize_routing first)"
                 )
+                self._spec = spec
                 arrays = spec.stack(routing, jnp.float64)
             else:
                 assert routing is None, "pre-stacked arrays already carry a routing"
                 arrays = spec
             self.topology = isinstance(arrays, TopologyArrays)
             self.arrays = arrays
+            self._set_routing_caches()
             if policy is None:
                 policy = make_policy(
                     kind, arrays.toggle, renew_in_chunks=renew_in_chunks
@@ -326,6 +348,18 @@ class FleetRuntime:
             self._rows_idx = np.arange(self.n_rows)
             self.reset()
 
+    def _set_routing_caches(self) -> None:
+        """Host/device twins of ``arrays.routing`` (the single source): the
+        int32 index vector the tick aggregates with, its numpy copy for
+        modes()/sync-group mapping, and per-port occupancy counts — all
+        derived ONCE per (re)routing, never per tick."""
+        if not self.topology:
+            self._routing_np = self._routing_idx = self._routing_idx_np = None
+            return
+        self._routing_np = np.asarray(self.arrays.routing)
+        self._routing_idx_np = np.argmax(self._routing_np, axis=0)
+        self._routing_idx = jnp.asarray(self._routing_idx_np, jnp.int32)
+
     def _step_fn(self, endo: bool):
         key = (self.topology, self.pred_source, endo)
         fn = _STEP_CACHE.get(key)
@@ -351,6 +385,8 @@ class FleetRuntime:
             fsm=fsm,
             ssm_h=ssm_h,
             t_dev=t_dev,
+            routing=self.arrays.routing if self.topology else None,
+            routing_idx=self._routing_idx,
             dcum=z(P),
             dcum_month=z(P),
             vpn_pref=z(M),
@@ -395,7 +431,7 @@ class FleetRuntime:
         with enable_x64():
             fsm, ssm_h, t_dev, packed_out = self._step_fn(endo)(
                 self.arrays, self.policy, self._fc, st.fsm, st.ssm_h,
-                st.t_dev, jax.device_put(np.concatenate(parts)),
+                st.t_dev, st.routing_idx, jax.device_put(np.concatenate(parts)),
             )
         po = np.asarray(packed_out)
         x = po[0:M].astype(np.int64)
@@ -443,9 +479,78 @@ class FleetRuntime:
             k: np.stack([np.asarray(o[k]) for o in outs], axis=1) for k in outs[0]
         }
 
+    def reroute(self, routing) -> None:
+        """Swap the pair→port routing MID-STREAM (topology mode only).
+
+        ``routing`` is (P,) candidate-port indices (validated against the
+        spec when the runtime was built from one) or a pre-built (M, P)
+        one-hot matrix. The swap is a pure operand change on the carried
+        :class:`RuntimeState`: the compiled tick is reused, and every piece
+        of carried state — FSM carries, float64 prefix rings (so window
+        sums near the swap mix old- and new-routing hours, as a live system
+        experiences them), pair billing state, SSM forecaster state — rides
+        across untouched. Contract: decisions from this tick on are
+        bit-exact vs :func:`repro.fleet.engine.replay_plan_topology` with
+        the same routing applied at the same hour.
+
+        Compute the new routing however you like — e.g.
+        :func:`repro.fleet.topology.optimize_routing` /
+        ``refine_routing``-style moves on the demand means observed so far
+        (see ``examples/reroute_demo.py`` for live re-routing on streamed
+        state).
+        """
+        assert self.topology, (
+            "reroute() applies to topology (shared-port) mode; a fleet has "
+            "no routing to swap"
+        )
+        M, P = self.n_rows, self.n_demand_rows
+        r = np.asarray(routing)
+        with enable_x64():
+            if r.ndim == 2:
+                assert r.shape == (M, P), (r.shape, (M, P))
+                assert np.all(r.sum(axis=0) == 1.0) and set(
+                    np.unique(r)
+                ) <= {0.0, 1.0}, "routing must be one-hot per pair"
+                r = np.argmax(r, axis=0)  # validate as indices below
+            if self._spec is not None:
+                r = self._spec.validate_routing(r)
+            else:
+                assert np.all((0 <= r) & (r < M)), (
+                    f"routing indices must lie in [0, {M}) — got "
+                    f"{r.min()}..{r.max()} (negative indices would wrap)"
+                )
+            from .topology import routing_matrix
+
+            R = routing_matrix(r, M, jnp.float64)
+        self.arrays = self.arrays._replace(routing=R)  # keep views coherent
+        self._set_routing_caches()
+        self._state = self._state._replace(
+            routing=R, routing_idx=self._routing_idx
+        )
+
+    def port_occupancy(self) -> np.ndarray:
+        """(M,) pairs attached per port under the CURRENT routing (all-ones
+        in fleet mode — one link per row)."""
+        if not self.topology:
+            return np.ones(self.n_rows)
+        return np.bincount(
+            self._routing_idx_np, minlength=self.n_rows
+        ).astype(np.float64)
+
     def modes(self, out) -> list:
-        """Map one step's FSM states to per-row collective modes."""
-        return [collective_mode(int(s)) for s in np.asarray(out["state"])]
+        """Map one step's FSM states to per-ACTUATOR collective modes.
+
+        Fleet mode: one mode per link (decision row == actuator). Topology
+        mode: one mode per PAIR — each pair inherits its routed port's FSM
+        state under the current routing, because the actuation surface
+        (:func:`repro.dist.collectives.fleet_sync_grads`) syncs per training
+        job (pair), not per decision row; pairs sharing an ON port share one
+        leased sync domain.
+        """
+        states = np.asarray(out["state"])
+        if self.topology:
+            states = states[self._routing_idx_np]
+        return [collective_mode(int(s)) for s in states]
 
 
 # ---------------------------------------------------------------------------
@@ -455,45 +560,81 @@ class FleetRuntime:
 
 @dataclasses.dataclass
 class FleetPlannerReport:
+    """Realized economics of an actuated streaming run.
+
+    Rows are DECISION rows (links in fleet mode, ports in topology mode);
+    actuator-level columns (``pair_gb``/``pair_gb_saved``) are per pair ==
+    per link in fleet mode. ``port_occupancy`` is the per-PORT lease
+    occupancy under the final routing (pairs attached; all-ones in fleet
+    mode) — decision rows no longer map 1:1 onto actuators.
+    """
+
     hours: int
     total_cost: float
     cost_always_vpn: float
     cost_always_cci: float
-    on_fraction: np.ndarray        # (N,) fraction of hours on the leased link
+    on_fraction: np.ndarray        # (M,) fraction of hours the row leased
     total_gb: float
-    link_cost: np.ndarray          # (N,) realized cost per link
+    link_cost: np.ndarray          # (M,) realized cost per decision row
+    port_occupancy: np.ndarray     # (M,) pairs attached per port/link
+    pair_gb: np.ndarray            # (P,) billed GB per pair/link
+    pair_gb_saved: np.ndarray      # (P,) wire GB saved vs always-full-precision
+
+    @property
+    def wire_savings_fraction(self) -> float:
+        """Fleet-wide fraction of raw wire GB the compressed path saved."""
+        raw = self.pair_gb.sum() + self.pair_gb_saved.sum()
+        return float(self.pair_gb_saved.sum() / raw) if raw > 0 else 0.0
 
 
 class ElasticFleetPlanner:
-    """N-link :class:`repro.core.planner.InterconnectPlanner`.
+    """N-row :class:`repro.core.planner.InterconnectPlanner`.
 
-    feed_hour(bytes) per tick; per-link FSM modes actuate the collective
-    layer (``'hierarchical'`` over the leased link at full precision,
+    feed_hour(bytes) per tick; FSM modes actuate the collective layer
+    (``'hierarchical'`` over the leased link at full precision,
     ``'compressed'`` int8+error-feedback on the pay-per-GB path), and each
     mode's counterfactual is priced on ITS OWN demand shape: the VPN path
     carries ~4x fewer billed GB (the endogenous loop — pricing both on the
     served volume creates the hysteresis trap documented in core.planner).
+
+    Two routings, like the runtime underneath: *fleet* mode feeds per-LINK
+    bytes and returns per-link modes; *per-port topology* mode (build with a
+    ``TopologySpec`` + ``routing=``, or routed ``TopologyArrays``) feeds
+    per-PAIR bytes, prices SHARED port leases through the routed core, and
+    returns per-pair modes — pairs sharing an ON port form one leased sync
+    domain (pass the port ids as ``groups=`` to
+    :func:`repro.dist.collectives.fleet_sync_grads` to fuse their syncs),
+    with wire bytes still metered per pair via ``sync_wire_bytes``.
+    Re-routing mid-stream (``.runtime.reroute``) re-targets the actuation
+    on the next tick.
     """
 
     COMPRESS_RATIO = COMPRESS_RATIO
 
     def __init__(self, fleet, *, compress_ratio: Optional[float] = None, **runtime_kw):
         self.runtime = FleetRuntime(fleet, **runtime_kw)
-        assert not self.runtime.topology, (
-            "ElasticFleetPlanner drives per-link fleets; plan topologies "
-            "offline and stream them with FleetRuntime directly"
-        )
+        self.topology = self.runtime.topology
         self.compress_ratio = float(compress_ratio or COMPRESS_RATIO)
-        n = self.runtime.n_rows
+        n, p = self.runtime.n_rows, self.runtime.n_demand_rows
         self.cost = np.zeros(n)
         self.cost_vpn_only = np.zeros(n)
         self.cost_cci_only = np.zeros(n)
-        self.gb = np.zeros(n)
+        self.gb = np.zeros(p)
+        self.gb_saved = np.zeros(p)
         self.on_hours = np.zeros(n, np.int64)
 
+    def sync_groups(self) -> np.ndarray:
+        """(P,) leased-sync-domain id per actuator: the routed port index in
+        topology mode (pairs sharing a port share one domain), own row in
+        fleet mode. Feed as ``groups=`` to ``fleet_sync_grads``."""
+        if not self.topology:
+            return np.arange(self.runtime.n_rows)
+        return self.runtime._routing_idx_np.copy()
+
     def feed_hour(self, cross_pod_bytes) -> list:
-        """Account one hour of per-link cross-pod traffic (bytes, (N,)).
-        Returns each link's collective mode for the hour just served."""
+        """Account one hour of per-actuator cross-pod traffic (bytes; per
+        link in fleet mode, per PAIR in topology mode). Returns each
+        actuator's collective mode for the hour just served."""
         raw_gb = np.asarray(cross_pod_bytes, np.float64) / 1e9
         out = self.runtime.step(
             raw_gb / self.compress_ratio, cci_demand_t=raw_gb
@@ -505,9 +646,12 @@ class ElasticFleetPlanner:
         self.cost += np.where(on, cci_c, vpn_c)
         self.cost_vpn_only += vpn_c
         self.cost_cci_only += cci_c
-        self.gb += np.where(on, raw_gb, raw_gb / self.compress_ratio)
+        modes = self.runtime.modes(out)
+        on_act = np.asarray([m == "hierarchical" for m in modes])
+        self.gb += np.where(on_act, raw_gb, raw_gb / self.compress_ratio)
+        self.gb_saved += np.where(on_act, 0.0, raw_gb - raw_gb / self.compress_ratio)
         self.on_hours += on
-        return self.runtime.modes(out)
+        return modes
 
     def report(self) -> FleetPlannerReport:
         h = self.runtime.t
@@ -519,6 +663,9 @@ class ElasticFleetPlanner:
             on_fraction=self.on_hours / max(1, h),
             total_gb=float(self.gb.sum()),
             link_cost=self.cost.copy(),
+            port_occupancy=self.runtime.port_occupancy(),
+            pair_gb=self.gb.copy(),
+            pair_gb_saved=self.gb_saved.copy(),
         )
 
 
@@ -541,23 +688,16 @@ def streaming_forecast_policy(
     arrays; topology histories are per PAIR and aggregated here exactly as
     the engine aggregates demand.
     """
-    from .engine import fleet_cost_series, topology_cost_series
+    from .engine import routed_cost_series
     from .policy import fit_cost_coef, forecast_gated_policy, forecast_horizon_hours
 
     history = np.asarray(history, np.float64)
     window = forecast_horizon_hours(arrays.toggle)
     with enable_x64():
         hist = jnp.asarray(history, jnp.float64)
-        if isinstance(arrays, TopologyArrays):
-            _, d_row, vpn, cci, _ = topology_cost_series(
-                arrays, hist, hours_per_month=hours_per_month
-            )
-        else:
-            d_row, vpn, cci = fleet_cost_series(
-                arrays, hist, hours_per_month=hours_per_month
-            )
-        coef = fit_cost_coef(d_row, vpn, cci)
-        agg = np.asarray(d_row)
+        s = routed_cost_series(arrays, hist, hours_per_month=hours_per_month)
+        coef = fit_cost_coef(s.row_demand, s.vpn, s.cci)
+        agg = np.asarray(s.row_demand)
     fc = StreamingForecaster.fit(agg, window, **train_kw)
     rows = agg.shape[0]
     policy = forecast_gated_policy(

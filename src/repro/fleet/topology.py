@@ -334,23 +334,33 @@ def refine_routing(
     headroom: float = 0.8,
     renew_in_chunks: bool = False,
     tol: float = 1e-6,
+    swap_moves: bool = True,
+    swap_cap: int = 256,
 ) -> Tuple[np.ndarray, dict]:
-    """Pair-move local search on top of the greedy routing.
+    """Local search on top of the greedy routing: single-pair moves AND
+    pair-swap (2-exchange) moves.
 
     Repeatedly evaluates every single-pair move to an alternative candidate
-    port by REPLANNING ONLY THE TWO AFFECTED PORTS (source loses the pair,
-    destination gains it) on their exact aggregated cost series, applies the
-    best realized-cost improvement, and stops after ``max_moves`` moves or
-    when no move helps — the bounded-iteration step beyond first-fit greedy
-    that ROADMAP's "routing beyond greedy" calls for. All candidate port
-    replans of one iteration run as ONE vmapped reactive :func:`policy_scan`
-    batch (the move set is structural, so the batch shape is fixed and the
-    jitted eval compiles once).
+    port and every pair SWAP (two pairs on different ports exchange ports —
+    the 2-exchange move single moves cannot express when both ports sit at
+    their capacity headroom) by REPLANNING ONLY THE TWO AFFECTED PORTS on
+    their exact aggregated cost series, applies the best realized-cost
+    improvement, and stops after ``max_moves`` moves or when no move helps
+    — the bounded-iteration step beyond first-fit greedy that ROADMAP's
+    "routing beyond greedy" calls for. All candidate port replans of one
+    iteration run as ONE vmapped reactive :func:`policy_scan` batch: the
+    single-move set is structural and the swap block is padded to a fixed
+    ``min(|structural swaps|, swap_cap)`` slots (swaps structurally
+    possible need ≥ 2 common candidate ports; at most ``swap_cap`` of the
+    currently-valid ones are evaluated per iteration), so the batch shape
+    is fixed and the jitted eval compiles once.
 
     Returns ``(refined_routing, info)`` with ``info`` carrying
     ``cost_before``/``cost_after`` (sum of per-port FSM toggle costs — the
-    report's ``togglecci`` total) and the applied ``moves``
-    ``(pair, from_port, to_port, saving)``.
+    report's ``togglecci`` total), the applied ``moves`` — single moves as
+    ``(pair, from_port, to_port, saving)``, swaps as ``((pair_a, pair_b),
+    (port_a, port_b), (port_b, port_a), saving)``, saving always at index
+    3 — and ``move_mix`` counting applied moves per kind.
     """
     from jax.experimental import enable_x64
 
@@ -423,47 +433,133 @@ def refine_routing(
             for m2 in topo.pairs[p].candidates
             if len(topo.pairs[p].candidates) > 1
         ]
+        # Structural swap slots: a 2-exchange (p, q) is only ever valid when
+        # both current ports lie in cand(p) ∩ cand(q), which needs at least
+        # two common candidates. The slot COUNT is fixed (padded with no-op
+        # evals) so one compiled batch serves every iteration; which valid
+        # swaps fill the slots is re-decided per iteration.
+        cand_sets = [set(pr.candidates) for pr in topo.pairs]
+        n_swap_slots = 0
+        if swap_moves:
+            n_structural = sum(
+                1
+                for p in range(P)
+                for q in range(p + 1, P)
+                if len(cand_sets[p] & cand_sets[q]) >= 2
+            )
+            n_swap_slots = min(n_structural, swap_cap)
+
+        def port_loads() -> np.ndarray:
+            return np.array(
+                [sum(mean_d[q] for q in members[m]) for m in range(M)]
+            )
+
+        def fits(m: int, load: float) -> bool:
+            return not math.isfinite(cap[m]) or load <= headroom * cap[m]
+
         moves_applied = []
+        move_mix = {"single": 0, "swap": 0}
         iterations = 0
+        evaluated = 0
         for _ in range(max_moves):
-            if not move_set:
+            if not move_set and not n_swap_slots:
                 break
             iterations += 1
+            # Currently-valid swaps (both ports must be exchangeable and the
+            # exchange must respect the packer's capacity rule on BOTH
+            # ends). Port loads are precomputed once per iteration — the
+            # O(P²) combination scan only does O(1) work per pair.
+            swaps = []
+            if n_swap_slots:
+                loads = port_loads()
+                for p in range(P):
+                    if len(swaps) == n_swap_slots:
+                        break
+                    for q in range(p + 1, P):
+                        m1, m2 = int(r[p]), int(r[q])
+                        if m1 == m2 or m2 not in cand_sets[p] or m1 not in cand_sets[q]:
+                            continue
+                        if not fits(m1, loads[m1] - mean_d[p] + mean_d[q]):
+                            continue
+                        if not fits(m2, loads[m2] - mean_d[q] + mean_d[p]):
+                            continue
+                        swaps.append((p, q))
+                        if len(swaps) == n_swap_slots:
+                            break
+            if not move_set and not swaps:
+                break
+            # Two cached batch shapes only: singles-only (no swap currently
+            # valid — the common post-convergence case) and singles + the
+            # fixed padded swap block. Padding replans port 0 as-is so the
+            # shape stays constant; its delta stays inf.
+            swap_block = n_swap_slots if swaps else 0
             port_ids, series = [], []
             for p, m2 in move_set:
                 m1 = int(r[p])
                 port_ids += [m1, m2]
                 series.append(port_series(m1, members[m1] - {p}))
                 series.append(port_series(m2, members[m2] | {p}))
+            for k in range(swap_block):
+                if k < len(swaps):
+                    p, q = swaps[k]
+                    m1, m2 = int(r[p]), int(r[q])
+                    port_ids += [m1, m2]
+                    series.append(port_series(m1, members[m1] - {p} | {q}))
+                    series.append(port_series(m2, members[m2] - {q} | {p}))
+                else:  # padding slot
+                    port_ids += [0, 0]
+                    series.append(port_series(0, members[0]))
+                    series.append(port_series(0, members[0]))
             totals = run_batch(port_ids, series)
-            deltas = np.full(len(move_set), np.inf)
+            loads = port_loads()
+            n_moves = len(move_set)
+            deltas = np.full(n_moves + swap_block, np.inf)
             for k, (p, m2) in enumerate(move_set):
                 m1 = int(r[p])
                 if m2 == m1:
                     continue  # structural no-op slot (keeps the batch fixed)
-                load = sum(mean_d[q] for q in members[m2]) + mean_d[p]
-                if math.isfinite(cap[m2]) and load > headroom * cap[m2]:
+                if not fits(m2, loads[m2] + mean_d[p]):
                     continue  # respect the greedy packer's capacity rule
                 deltas[k] = (totals[2 * k] + totals[2 * k + 1]) - (
                     port_cost[m1] + port_cost[m2]
                 )
+            for j, (p, q) in enumerate(swaps):
+                k = n_moves + j
+                m1, m2 = int(r[p]), int(r[q])
+                deltas[k] = (totals[2 * k] + totals[2 * k + 1]) - (
+                    port_cost[m1] + port_cost[m2]
+                )
+            evaluated += n_moves + len(swaps)
             best = int(np.argmin(deltas))
             if not np.isfinite(deltas[best]) or deltas[best] >= -tol:
                 break
-            p, m2 = move_set[best]
-            m1 = int(r[p])
-            members[m1].discard(p)
-            members[m2].add(p)
-            r[p] = m2
+            if best < n_moves:
+                p, m2 = move_set[best]
+                m1 = int(r[p])
+                members[m1].discard(p)
+                members[m2].add(p)
+                r[p] = m2
+                moves_applied.append((p, m1, m2, float(-deltas[best])))
+                move_mix["single"] += 1
+            else:
+                p, q = swaps[best - n_moves]
+                m1, m2 = int(r[p]), int(r[q])
+                members[m1].discard(p)
+                members[m1].add(q)
+                members[m2].discard(q)
+                members[m2].add(p)
+                r[p], r[q] = m2, m1
+                moves_applied.append(((p, q), (m1, m2), (m2, m1), float(-deltas[best])))
+                move_mix["swap"] += 1
             port_cost[m1] = totals[2 * best]
             port_cost[m2] = totals[2 * best + 1]
-            moves_applied.append((p, m1, m2, float(-deltas[best])))
 
     return r, {
         "cost_before": cost_before,
         "cost_after": float(port_cost.sum()),
         "moves": moves_applied,
-        "evaluated_moves": len(move_set) * iterations,
+        "move_mix": move_mix,
+        "evaluated_moves": evaluated,
     }
 
 

@@ -112,9 +112,43 @@ def test_check_artifact_floor_math(tmp_path, baselines):
     art = _write(tmp_path / "BENCH_fleet.json", [{"link_hours_per_s": 5e5}])
     with open(baselines) as f:
         b = json.load(f)
-    name, metric, value, floor, ok = check_artifact(
+    [(name, metric, committed, value, floor, ok)] = check_artifact(
         art, b, scale=0.5, max_regression=0.30
     )
-    assert name == "fleet" and value == 5e5
+    assert name == "fleet" and value == 5e5 and committed == 1e6
     assert floor == pytest.approx(1e6 * 0.5 * 0.7)
     assert ok
+
+
+def test_extra_metrics_gated(tmp_path, capsys):
+    """A baseline entry with extra_metrics gates EVERY listed metric of the
+    one artifact (the runtime bench carries fleet- and topology-mode
+    throughput in one BENCH_runtime.json)."""
+    baselines = _write(tmp_path / "baselines.json", {
+        "runtime": {
+            "metric": "link_steps_per_s", "value": 1e6,
+            "extra_metrics": {"topology_port_steps_per_s": 8e5},
+        }
+    })
+    good = _write(
+        tmp_path / "BENCH_runtime.json",
+        [{"link_steps_per_s": 9.9e5, "topology_port_steps_per_s": 7.9e5}],
+    )
+    assert main([good, "--baselines", baselines]) == 0
+    out = capsys.readouterr().out
+    assert "topology_port_steps_per_s" in out and "REGRESSION" not in out
+
+    # The extra metric regressing fails even when the primary passes.
+    bad = _write(
+        tmp_path / "BENCH_runtime.json",
+        [{"link_steps_per_s": 9.9e5, "topology_port_steps_per_s": 1e4}],
+    )
+    assert main([bad, "--baselines", baselines]) == 1
+    assert "REGRESSION" in capsys.readouterr().out
+
+    # And a missing extra metric is a gate-integrity failure, not a pass.
+    missing = _write(
+        tmp_path / "BENCH_runtime.json", [{"link_steps_per_s": 9.9e5}]
+    )
+    assert main([missing, "--baselines", baselines]) == 1
+    assert "topology_port_steps_per_s" in capsys.readouterr().out

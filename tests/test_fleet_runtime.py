@@ -251,6 +251,143 @@ def test_month_boundary_streaming():
 
 
 # ---------------------------------------------------------------------------
+# Live re-routing: reroute() == offline replay_plan_topology, bit for bit
+# ---------------------------------------------------------------------------
+
+
+def _alternative_routing(topo, r0, rng, max_moved=6):
+    """A valid routing that moves a few pairs to other candidate ports."""
+    r1 = np.asarray(r0).copy()
+    moved = 0
+    for i, pr in enumerate(topo.pairs):
+        others = [c for c in pr.candidates if c != r0[i]]
+        if others and moved < max_moved and rng.random() < 0.8:
+            r1[i] = int(rng.choice(others))
+            moved += 1
+    return r1, moved
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=4, deadline=None)
+def test_reroute_matches_offline_replay_bit_for_bit(seed):
+    """The tentpole's re-routing contract: streaming with reroute() at hour
+    s equals an offline replay that applies the same routing at the same
+    hour — decisions bit-for-bit over the WHOLE horizon (window sums near
+    the swap mix old- and new-routing hours identically on both sides),
+    for reactive, hysteresis and forecast-replay policies."""
+    from repro.fleet import replay_plan_topology
+
+    rng = np.random.default_rng(seed)
+    sc = build_topology_scenario(
+        8, n_facilities=3, horizon=int(rng.integers(250, 450)), seed=seed
+    )
+    r0 = optimize_routing(sc.topo, sc.demand)
+    r1, moved = _alternative_routing(sc.topo, r0, rng)
+    if moved == 0:
+        return  # no alternative candidates sampled — nothing to swap
+    T = sc.demand.shape[1]
+    s = int(rng.integers(50, T - 50))
+    hpm = sc.topo.hours_per_month
+    with enable_x64():
+        arrays = sc.topo.stack(r0, jnp.float64)
+
+    base = FleetRuntime(arrays, hours_per_month=hpm).run(sc.demand)
+    for pol in _policies_for(arrays, base, rng):
+        rt = FleetRuntime(arrays, policy=pol, hours_per_month=hpm)
+        outs = []
+        for t in range(T):
+            if t == s:
+                rt.reroute(r1)
+            outs.append(rt.step(sc.demand[:, t]))
+        x = np.stack([o["x"] for o in outs], axis=1)
+        state = np.stack([o["state"] for o in outs], axis=1)
+        replay = replay_plan_topology(
+            arrays, sc.demand, [(0, r0), (s, r1)],
+            policy=pol, hours_per_month=hpm,
+        )
+        np.testing.assert_array_equal(x, np.asarray(replay["x"]))
+        np.testing.assert_array_equal(state, np.asarray(replay["state"]))
+
+
+def test_replay_single_segment_is_plan_topology():
+    """A one-entry schedule must reproduce plan_topology bit-for-bit (the
+    replay oracle degenerates to the offline planner)."""
+    from repro.fleet import plan_topology, replay_plan_topology
+
+    sc = build_topology_scenario(8, n_facilities=3, horizon=400, seed=2)
+    r0 = optimize_routing(sc.topo, sc.demand)
+    hpm = sc.topo.hours_per_month
+    with enable_x64():
+        arrays = sc.topo.stack(r0, jnp.float64)
+    plan = plan_topology(arrays, sc.demand, hours_per_month=hpm)
+    rep = replay_plan_topology(arrays, sc.demand, [(0, r0)], hours_per_month=hpm)
+    np.testing.assert_array_equal(np.asarray(rep["x"]), np.asarray(plan["x"]))
+    np.testing.assert_array_equal(
+        np.asarray(rep["state"]), np.asarray(plan["state"])
+    )
+    np.testing.assert_array_equal(
+        np.asarray(rep["toggle_cost"]), np.asarray(plan["toggle_cost"])
+    )
+
+
+def test_reroute_guards_and_modes_mapping():
+    """reroute() is topology-only, validates against the spec, and modes()
+    maps port states onto PAIRS through the current routing."""
+    from repro.fleet import build_reroute_scenario
+
+    sc = build_reroute_scenario(horizon=300, shift_hour=150, seed=0)
+    rt = FleetRuntime(sc.topo, routing=[0, 0, 1])
+    out = rt.step(sc.demand[:, 0])
+    modes = rt.modes(out)
+    assert len(modes) == 3  # per PAIR, not per port
+    states = np.asarray(out["state"])
+    from repro.core.planner import collective_mode
+
+    assert modes == [collective_mode(int(states[m])) for m in (0, 0, 1)]
+    np.testing.assert_array_equal(rt.port_occupancy(), [2.0, 1.0])
+    rt.reroute([0, 0, 0])
+    np.testing.assert_array_equal(rt.port_occupancy(), [3.0, 0.0])
+    with pytest.raises(AssertionError, match="non-candidate"):
+        rt.reroute([1, 0, 0])  # pair 0's only candidate is port 0
+    with pytest.raises(AssertionError, match="non-candidate"):
+        # The matrix form goes through the SAME candidate validation.
+        rt.reroute(np.array([[0.0, 1.0, 1.0], [1.0, 0.0, 0.0]]))
+    with pytest.raises(AssertionError, match="one-hot"):
+        rt.reroute(np.ones((2, 3)))
+    fleet_rt = FleetRuntime(_planner_fleet())
+    with pytest.raises(AssertionError, match="topology"):
+        fleet_rt.reroute([0, 0])
+    assert fleet_rt.modes(fleet_rt.step(np.zeros(2))) == ["compressed"] * 2
+
+
+def test_reroute_demo_scenario_realizes_savings():
+    """The CI demo's core claim, in-tree: live re-routing onto the freed
+    hub port beats the frozen day-one routing on realized streamed cost."""
+    from repro.fleet import build_reroute_scenario
+
+    sc = build_reroute_scenario(horizon=1400, shift_hour=500, seed=1)
+    r0 = optimize_routing(sc.topo, sc.demand[:, :168])
+    assert list(r0) == [0, 0, 1]  # hub full -> hot pair spills
+
+    def run(live):
+        rt = FleetRuntime(sc.topo, routing=r0)
+        cost = 0.0
+        for t in range(sc.demand.shape[1]):
+            if live and t > 0 and t % 24 == 0:
+                seen = sc.demand[:, max(0, t - 168):t].mean(axis=1)
+                r_new = optimize_routing(sc.topo, mean_demand=seen)
+                if not np.array_equal(r_new, rt._routing_np.argmax(axis=0)):
+                    rt.reroute(r_new)
+            cost += float(rt.step(sc.demand[:, t])["cost"].sum())
+        return cost, rt
+
+    frozen, _ = run(False)
+    lively, rt = run(True)
+    assert lively < frozen
+    np.testing.assert_array_equal(rt.port_occupancy(), [3.0, 0.0])
+
+
+# ---------------------------------------------------------------------------
 # Live-SSM forecast mode (causal, endogenous-capable)
 # ---------------------------------------------------------------------------
 
@@ -352,6 +489,53 @@ def test_fleet_planner_factory():
     assert isinstance(pl, ElasticFleetPlanner)
 
 
+def test_elastic_planner_per_port_topology_mode():
+    """Per-port actuation: feed per-PAIR bytes, get per-pair modes mapped
+    through the routing; the report carries per-PORT lease occupancy and
+    per-pair wire-byte savings instead of assuming one link per row."""
+    from repro.core.pricing import flat_rate
+    from repro.fleet import PairSpec, PortSpec, TopologySpec
+
+    mk_port = lambda n, f: PortSpec(
+        name=n, facility=f, cloud="aws", L_cci=4.55, V_cci=0.1,
+        c_cci=0.002, D=6, T_cci=12, h=12,
+    )
+    pairs = tuple(
+        PairSpec(f"pr{i}", "gcp", "aws", 0.105, flat_rate(0.1),
+                 candidates=(0, 1))
+        for i in range(3)
+    )
+    topo = TopologySpec(ports=(mk_port("hub", "f0"), mk_port("idle", "f1")),
+                        pairs=pairs)
+    pl = ElasticFleetPlanner(topo, routing=[0, 0, 1])
+    assert pl.topology
+    np.testing.assert_array_equal(pl.sync_groups(), [0, 0, 1])
+    traffic = np.array([5e12, 5e12, 1e9])  # two hot pairs share the hub
+    modes = None
+    for _ in range(200):
+        modes = pl.feed_hour(traffic)
+    assert modes == ["hierarchical", "hierarchical", "compressed"]
+    rep = pl.report()
+    np.testing.assert_array_equal(rep.port_occupancy, [2.0, 1.0])
+    assert rep.on_fraction.shape == (2,)        # per PORT
+    assert rep.pair_gb_saved.shape == (3,)      # per PAIR
+    # The cold pair keeps compressing all 200 hours; the hot pairs only
+    # during the provisioning window — per-GB savings must reflect that.
+    frac_saved = rep.pair_gb_saved / (rep.pair_gb + rep.pair_gb_saved)
+    assert frac_saved[2] > frac_saved[0]
+    assert 0 < rep.wire_savings_fraction < 1
+    # Shared lease: the hub port's CCI counterfactual charges ONE lease for
+    # two pairs — L + 2V + c·(d1+d2) per hour, not 2L (the per-link view).
+    gb = traffic / 1e9
+    shared_hour = 4.55 + 2 * 0.1 + 0.002 * (gb[0] + gb[1])
+    assert pl.cost_cci_only[0] == pytest.approx(rep.hours * shared_hour, rel=1e-9)
+    # Re-routing re-targets actuation next tick.
+    pl.runtime.reroute([0, 0, 0])
+    modes = pl.feed_hour(traffic)
+    np.testing.assert_array_equal(pl.sync_groups(), [0, 0, 0])
+    assert modes[2] == "hierarchical"  # now rides the (ON) hub port
+
+
 # ---------------------------------------------------------------------------
 # Collective actuation: link modes select the int8 vs hierarchical path
 # ---------------------------------------------------------------------------
@@ -397,6 +581,33 @@ def test_link_modes_actuate_sync_grads():
         assert np.max(np.abs(a - b)) < np.abs(a).max() / 32
         assert errs[1] is not None
         assert 3.0 < billed[0] / billed[1] <= 4.0
+
+        # Shared sync domains (per-port topology actuation): pairs on one
+        # leased port sync in ONE call — results and per-pair billed bytes
+        # identical to the ungrouped path.
+        grads4 = [
+            {"w": jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)}
+            for _ in range(4)
+        ]
+        modes4 = ["hierarchical", "hierarchical", "compressed", "compressed"]
+        groups = [7, 7, 7, 9]  # pairs 0+1 share port 7's leased domain
+        gs, ge, gb = fleet_sync_grads(grads4, mesh, modes4, groups=groups)
+        us, ue, ub = fleet_sync_grads(grads4, mesh, modes4)
+        for i in range(4):
+            np.testing.assert_array_equal(
+                np.asarray(gs[i]["w"]), np.asarray(us[i]["w"])
+            )
+        assert gb == ub
+        assert ge[0] is None and ge[2] is not None
+        # Carried residuals survive a re-grouping (post-reroute step).
+        gs2, ge2, _ = fleet_sync_grads(
+            grads4, mesh, modes4, ge, groups=[7, 9, 9, 9]
+        )
+        us2, ue2, _ = fleet_sync_grads(grads4, mesh, modes4, ue)
+        for i in range(4):
+            np.testing.assert_array_equal(
+                np.asarray(gs2[i]["w"]), np.asarray(us2[i]["w"])
+            )
         print("OK")
     """
     env = dict(os.environ)

@@ -1,0 +1,209 @@
+"""Routing-invariant property tests (hypothesis).
+
+The invariants every routing producer must hold, whatever the scenario:
+
+* `optimize_routing` / `refine_routing` only ever route a pair to one of
+  its candidate ports (`candidate_matrix`), and respect the port-capacity
+  headroom rule whenever a feasible placement exists;
+* `refine_routing` cost is monotonically non-increasing move by move
+  (every accepted move's saving is positive and they sum to the claimed
+  total), and its 2-exchange (pair-swap) moves unlock improvements the
+  single-pair move cannot express when both ports sit at their headroom.
+"""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.pricing import flat_rate
+from repro.fleet import (
+    PairSpec,
+    PortSpec,
+    TopologySpec,
+    build_topology_scenario,
+    optimize_routing,
+    refine_routing,
+)
+
+
+def _mean_loads(topo, routing, demand) -> np.ndarray:
+    d = np.minimum(
+        np.asarray(demand, np.float64),
+        np.array([p.capacity_gb_hr for p in topo.pairs])[:, None],
+    ).mean(axis=1)
+    loads = np.zeros(topo.n_ports)
+    for i, m in enumerate(routing):
+        loads[int(m)] += d[i]
+    return loads
+
+
+# ---------------------------------------------------------------------------
+# optimize_routing invariants
+# ---------------------------------------------------------------------------
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=5, deadline=None)
+def test_optimize_routing_candidates_and_headroom(seed):
+    """Sampled facility graphs: the greedy packing must stay inside every
+    pair's candidate set, and any port loaded past the headroom ceiling
+    must be explainable as fallback (some routed pair had NO candidate with
+    room at any packing order) — never a silent capacity violation."""
+    rng = np.random.default_rng(seed)
+    sc = build_topology_scenario(
+        int(rng.integers(6, 20)),
+        n_facilities=int(rng.integers(2, 5)),
+        horizon=300,
+        seed=seed,
+        demand_scale=float(rng.uniform(0.3, 3.0)),
+    )
+    headroom = 0.8
+    r = optimize_routing(sc.topo, sc.demand, headroom=headroom)
+    cand = sc.topo.candidate_matrix()
+    for i, m in enumerate(r):
+        assert cand[i, int(m)], f"pair {i} routed to non-candidate port {m}"
+
+    caps = np.array([p.capacity_gb_hr for p in sc.topo.ports])
+    loads = _mean_loads(sc.topo, r, sc.demand)
+    mean_d = np.minimum(
+        np.asarray(sc.demand, np.float64),
+        np.array([p.capacity_gb_hr for p in sc.topo.pairs])[:, None],
+    ).mean(axis=1)
+    for m in np.where(loads > headroom * caps + 1e-9)[0]:
+        # Overloaded port: every pair on it must have been a fallback —
+        # i.e. even ALONE it cannot fit any of its candidates' remaining
+        # headroom given the total candidate demand pressure. The weakest
+        # sound check: one of its pairs alone exceeds the headroom of all
+        # its candidates, OR total demand over the candidate set exceeds
+        # the candidate capacity — both mean no feasible packing existed.
+        for i in np.where(r == m)[0]:
+            cands = sc.topo.pairs[i].candidates
+            alone_infeasible = all(
+                mean_d[i] > headroom * caps[c] for c in cands
+            )
+            pressure = sum(mean_d[j] for j in range(sc.n_pairs)
+                           if set(sc.topo.pairs[j].candidates) & set(cands))
+            cap_total = sum(headroom * caps[c] for c in cands)
+            # A genuine fallback implies every candidate was full at
+            # placement time, which (summing the k rejection inequalities)
+            # implies pressure > cap_total − k·mean_d[i]; anything below
+            # that bound means a feasible port was ignored.
+            slack = len(cands) * mean_d[i]
+            assert alone_infeasible or pressure > cap_total - slack, (
+                f"port {m} over headroom but pair {i} had a feasible "
+                "candidate — the packer violated its own capacity rule"
+            )
+
+
+def test_optimize_routing_headroom_respected_when_feasible():
+    """Ample capacity: NO port may exceed the headroom ceiling."""
+    sc = build_topology_scenario(12, n_facilities=3, horizon=300, seed=3,
+                                 demand_scale=0.2)
+    r = optimize_routing(sc.topo, sc.demand, headroom=0.8)
+    caps = np.array([p.capacity_gb_hr for p in sc.topo.ports])
+    loads = _mean_loads(sc.topo, r, sc.demand)
+    finite = np.isfinite(caps)
+    assert np.all(loads[finite] <= 0.8 * caps[finite] + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# refine_routing invariants
+# ---------------------------------------------------------------------------
+
+
+def _replay_capacity_rule(topo, routing, demand, moves, headroom=0.8):
+    """Re-apply the accepted moves and assert the packer's capacity rule
+    held at EVERY accepted move (not just in the final state)."""
+    r = np.asarray(routing, np.int64).copy()
+    mean_d = np.minimum(
+        np.asarray(demand, np.float64),
+        np.array([p.capacity_gb_hr for p in topo.pairs])[:, None],
+    ).mean(axis=1)
+    caps = np.array([p.capacity_gb_hr for p in topo.ports])
+    loads = _mean_loads(topo, r, demand)
+
+    def fits(m, load):
+        return not math.isfinite(caps[m]) or load <= headroom * caps[m] + 1e-9
+
+    for mv in moves:
+        if isinstance(mv[0], tuple):  # swap: ((p, q), (m1, m2), (m2, m1), s)
+            (p, q), (m1, m2) = mv[0], mv[1]
+            assert fits(m1, loads[m1] - mean_d[p] + mean_d[q])
+            assert fits(m2, loads[m2] - mean_d[q] + mean_d[p])
+            loads[m1] += mean_d[q] - mean_d[p]
+            loads[m2] += mean_d[p] - mean_d[q]
+            r[p], r[q] = m2, m1
+        else:                          # single: (p, m1, m2, s)
+            p, m1, m2 = mv[0], mv[1], mv[2]
+            assert fits(m2, loads[m2] + mean_d[p])
+            loads[m1] -= mean_d[p]
+            loads[m2] += mean_d[p]
+            r[p] = m2
+    return r
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=4, deadline=None)
+def test_refine_routing_invariants(seed):
+    """Sampled scenarios, deliberately-degraded starting routing: refined
+    routing stays inside candidate sets, every accepted move saves cost
+    (monotone non-increasing), the savings sum to the claimed drop, the
+    move replay respects capacity headroom, and move_mix counts the moves."""
+    rng = np.random.default_rng(seed)
+    sc = build_topology_scenario(
+        10, n_facilities=3, horizon=400, seed=seed,
+        demand_scale=float(rng.uniform(0.5, 2.0)),
+    )
+    # Degrade the greedy routing: park some pairs on their worst candidate.
+    r0 = optimize_routing(sc.topo, sc.demand)
+    for i, pr in enumerate(sc.topo.pairs):
+        if len(pr.candidates) > 1 and rng.random() < 0.5:
+            r0[i] = int(rng.choice([c for c in pr.candidates if c != r0[i]]))
+    refined, info = refine_routing(sc.topo, sc.demand, r0, max_moves=6)
+
+    sc.topo.validate_routing(refined)  # candidate invariant
+    assert info["cost_after"] <= info["cost_before"] + 1e-6
+    savings = [m[3] for m in info["moves"]]
+    assert all(s > 0 for s in savings)  # monotone: every accepted move saves
+    assert info["cost_before"] - info["cost_after"] == pytest.approx(
+        sum(savings), rel=1e-9, abs=1e-6
+    )
+    assert info["move_mix"]["single"] + info["move_mix"]["swap"] == len(
+        info["moves"]
+    )
+    got = _replay_capacity_rule(sc.topo, r0, sc.demand, info["moves"])
+    np.testing.assert_array_equal(got, refined)
+
+
+def test_pair_swap_unlocks_headroom_locked_exchange():
+    """Both ports at capacity headroom: no SINGLE move is feasible, but the
+    2-exchange that swaps the hot pair onto the cheap port is — and the
+    local search must find it (the satellite's new move type)."""
+    mk = lambda n, c: PortSpec(
+        name=n, facility=f"f-{n}", cloud="aws", L_cci=2.0, V_cci=0.1,
+        c_cci=c, capacity_gb_hr=130.0, D=6, T_cci=12, h=12,
+    )
+    mk_pair = lambda n: PairSpec(
+        n, "gcp", "aws", 0.105, flat_rate(0.1), candidates=(0, 1)
+    )
+    topo = TopologySpec(
+        ports=(mk("cheap", 0.01), mk("dear", 0.2)),
+        pairs=(mk_pair("hot"), mk_pair("cold")),
+    )
+    d = np.stack([np.full(600, 100.0), np.full(600, 80.0)])
+    bad = [1, 0]  # hot pair on the expensive port, cold on the cheap one
+    # Single moves are capacity-blocked (100+80 > 0.8*130 on either port)...
+    refined_ns, info_ns = refine_routing(
+        topo, d, bad, max_moves=4, swap_moves=False
+    )
+    np.testing.assert_array_equal(refined_ns, bad)
+    assert info_ns["moves"] == [] and info_ns["move_mix"]["swap"] == 0
+    # ...but the swap is feasible (each port keeps one pair) and pays.
+    refined, info = refine_routing(topo, d, bad, max_moves=4)
+    np.testing.assert_array_equal(refined, [0, 1])
+    assert info["move_mix"] == {"single": 0, "swap": 1}
+    ((p, q), (m1, m2), (m2b, m1b), saving) = info["moves"][0]
+    assert {p, q} == {0, 1} and {m1, m2} == {0, 1} and saving > 0
+    assert info["cost_after"] < info["cost_before"]

@@ -10,7 +10,17 @@ actuation loop would consume the modes) — and reports
   acceptance bar is ≥ 1e6 on one CPU device: per-tick dispatch overhead,
   not FLOPs, is what could sink it);
 * ``tick_us``           — wall per streaming tick (the replanning latency a
-  serving loop pays every simulated hour);
+  serving loop pays every simulated hour), with ``tick_us_p50/p95/p99``
+  tail percentiles (p99 ≫ p50 is the recompile / device-sync smoking gun);
+* ``obs_overhead_ratio`` — with-observability streaming throughput (device
+  metrics ring + trace + monitors at the default drain cadence) over the
+  COMMITTED plain-throughput baseline (``baselines.json["runtime"]``),
+  gated via ``extra_metrics``: the acceptance bar is that telemetry-on
+  streaming stays ≥ 0.95x the runtime's gated baseline of record — turning
+  observability on must not take the serving loop below the SLO the gate
+  already enforces. The raw plain-vs-obs same-run comparison is also
+  emitted (``obs_vs_plain_ratio``, ``obs_tick_us``) ungated, for eyeballing
+  the marginal cost per tick;
 * ``forecast_link_steps_per_s`` — same loop under the SSM-forecast-gated
   policy in live mode (carried forecaster state);
 * ``topology_port_steps_per_s`` — the SAME streaming loop in topology mode
@@ -31,6 +41,8 @@ CLI:
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import numpy as np
@@ -49,14 +61,19 @@ from repro.fleet import (
 from ._util import save_rows, write_bench_artifact
 
 
-def _time_stream(rt: FleetRuntime, cols, warmup: int = 20) -> float:
-    """Seconds per tick, steady state (jit warm, per-tick sync consume)."""
+def _time_stream(rt: FleetRuntime, cols, warmup: int = 20) -> np.ndarray:
+    """(ticks,) seconds per tick, steady state (jit warm, per-tick sync
+    consume) — keep the whole distribution: p99/p50 separation is the
+    drain-cadence / recompile smoking gun a mean would smear away."""
+    assert len(cols) > warmup, (len(cols), warmup)
     for t in range(warmup):
         jax.block_until_ready(rt.step(cols[t % len(cols)])["x"])
-    t0 = time.perf_counter()
-    for c in cols[warmup:]:
+    out = np.empty(len(cols) - warmup)
+    for i, c in enumerate(cols[warmup:]):
+        t0 = time.perf_counter()
         jax.block_until_ready(rt.step(c)["x"])
-    return (time.perf_counter() - t0) / max(1, len(cols) - warmup)
+        out[i] = time.perf_counter() - t0
+    return out
 
 
 def run(n_links: int = 1024, ticks: int = 3000, *, history: int = 600, seed: int = 0):
@@ -68,7 +85,23 @@ def run(n_links: int = 1024, ticks: int = 3000, *, history: int = 600, seed: int
 
     # Reactive streaming (the gated metric).
     rt = FleetRuntime(sc.fleet)
-    per_tick = _time_stream(rt, cols)
+    ticks_s = _time_stream(rt, cols)
+    per_tick = float(ticks_s.mean())
+    p50, p95, p99 = (float(np.percentile(ticks_s, q)) for q in (50, 95, 99))
+
+    # The same loop with the observability layer on (device metrics ring +
+    # trace + monitors at the default drain cadence): the gated
+    # obs_overhead_ratio is with-obs throughput over the COMMITTED plain
+    # baseline — the bar is ≥ 0.95x the runtime's throughput of record.
+    # Warm past ONE FULL drain window: the drain tick is a second compiled
+    # variant, and a warmup shorter than the cadence would put its compile
+    # inside the timed region (measured ~+800µs/tick smeared over the run).
+    ort = FleetRuntime(sc.fleet, obs=True)
+    obs_ticks_s = _time_stream(ort, cols, warmup=ort.obs.cadence + 16)
+    obs_per_tick = float(obs_ticks_s.mean())
+    with open(os.path.join(os.path.dirname(__file__), "baselines.json")) as f:
+        committed_tps = float(json.load(f)["runtime"]["value"])
+    obs_overhead_ratio = (n_links / obs_per_tick) / committed_tps
 
     # Decision equality vs the offline batch plan on the same horizon.
     rt.reset()
@@ -95,7 +128,7 @@ def run(n_links: int = 1024, ticks: int = 3000, *, history: int = 600, seed: int
         arrays, policy=pol, forecaster=fc,
         hours_per_month=sc.fleet.hours_per_month,
     )
-    f_per_tick = _time_stream(frt, cols)
+    f_per_tick = float(_time_stream(frt, cols).mean())
 
     # Topology mode at EQUAL port count: M ≈ n_links ports sharing leases
     # over P = M pairs, the routing matrix a per-tick traced operand
@@ -109,7 +142,7 @@ def run(n_links: int = 1024, ticks: int = 3000, *, history: int = 600, seed: int
     trt = FleetRuntime(tsc.topo, routing=routing)
     assert trt.n_rows == n_eq, (trt.n_rows, n_eq)
     tcols = [np.ascontiguousarray(tsc.demand[:, t]) for t in range(ticks)]
-    t_per_tick = _time_stream(trt, tcols)
+    t_per_tick = float(_time_stream(trt, tcols).mean())
     # A live reroute is a pure operand swap: the next tick must reuse the
     # compiled step (measured as one tick, not a recompile pause).
     trt.reroute(routing)
@@ -126,6 +159,13 @@ def run(n_links: int = 1024, ticks: int = 3000, *, history: int = 600, seed: int
         "ticks": ticks,
         "link_steps_per_s": n_links / per_tick,
         "tick_us": per_tick * 1e6,
+        "tick_us_p50": p50 * 1e6,
+        "tick_us_p95": p95 * 1e6,
+        "tick_us_p99": p99 * 1e6,
+        "obs_link_steps_per_s": n_links / obs_per_tick,
+        "obs_tick_us": obs_per_tick * 1e6,
+        "obs_overhead_ratio": obs_overhead_ratio,
+        "obs_vs_plain_ratio": per_tick / obs_per_tick,
         "forecast_link_steps_per_s": n_links / f_per_tick,
         "forecast_tick_us": f_per_tick * 1e6,
         "forecaster_train_s": train_s,
@@ -140,6 +180,9 @@ def run(n_links: int = 1024, ticks: int = 3000, *, history: int = 600, seed: int
     derived = (
         f"link_steps_per_s={rows[0]['link_steps_per_s']:.3g} "
         f"tick_us={rows[0]['tick_us']:.1f} "
+        f"(p50 {rows[0]['tick_us_p50']:.1f} / p95 {rows[0]['tick_us_p95']:.1f}"
+        f" / p99 {rows[0]['tick_us_p99']:.1f}) "
+        f"obs_ratio={rows[0]['obs_overhead_ratio']:.3f} "
         f"forecast={rows[0]['forecast_link_steps_per_s']:.3g}/s "
         f"topology={rows[0]['topology_port_steps_per_s']:.3g}/s"
     )
@@ -166,7 +209,8 @@ def main() -> None:
     print(
         f"runtime: {r['links']} links streamed {r['ticks']} ticks -> "
         f"{r['link_steps_per_s']:.3g} link-steps/s "
-        f"({r['tick_us']:.1f} us/tick; forecast-gated "
+        f"({r['tick_us']:.1f} us/tick, p99 {r['tick_us_p99']:.1f}; "
+        f"obs ratio {r['obs_overhead_ratio']:.3f}; forecast-gated "
         f"{r['forecast_link_steps_per_s']:.3g}/s; topology mode "
         f"{r['topology_port_steps_per_s']:.3g} port-steps/s at "
         f"{r['topology_ports']} ports / {r['topology_pairs']} pairs), "

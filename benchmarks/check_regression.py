@@ -53,9 +53,15 @@ def check_artifact(path: str, baselines: dict, *, scale: float, max_regression: 
     baselines / malformed artifacts.
 
     A baseline entry gates its primary ``metric``/``value`` pair and any
-    additional ``extra_metrics`` (a ``{metric: baseline_value}`` dict) — so
-    one artifact can carry several gated numbers (e.g. the runtime bench's
-    fleet-mode AND topology-mode throughputs) without a second bench job.
+    additional ``extra_metrics`` — so one artifact can carry several gated
+    numbers (e.g. the runtime bench's fleet-mode AND topology-mode
+    throughputs) without a second bench job. An extra_metrics value is
+    either a bare baseline number (gated like the primary: floor =
+    ``value * scale * (1 - max_regression)``) or a ``{"value": v, "floor":
+    f}`` dict declaring an ABSOLUTE floor — for machine-independent
+    metrics (e.g. the runtime bench's ``bit_exact_vs_offline`` indicator,
+    floor 1.0), where discounting by runner speed would make the gate
+    vacuous.
     """
     name = re.sub(r"^BENCH_|\.json$", "", os.path.basename(path))
     if name not in baselines:
@@ -66,9 +72,19 @@ def check_artifact(path: str, baselines: dict, *, scale: float, max_regression: 
             f'a "{name}" entry to benchmarks/baselines.json'
         )
     base = baselines[name]
-    metrics = {base["metric"]: float(base["value"])}
+    metrics = {base["metric"]: (float(base["value"]), None)}
     for m, v in base.get("extra_metrics", {}).items():
-        metrics[m] = float(v)
+        if isinstance(v, dict):
+            try:
+                metrics[m] = (float(v["value"]), float(v["floor"]))
+            except KeyError as e:
+                raise GateError(
+                    f"baselines.json: extra_metrics[{m!r}] of {name!r} is a "
+                    f"dict but lacks {e} — absolute-floor entries need "
+                    '{"value": ..., "floor": ...}'
+                )
+        else:
+            metrics[m] = (float(v), None)
     try:
         with open(path) as f:
             rows = json.load(f)
@@ -80,14 +96,17 @@ def check_artifact(path: str, baselines: dict, *, scale: float, max_regression: 
     except json.JSONDecodeError as e:
         raise GateError(f"{path}: malformed artifact JSON ({e})")
     results = []
-    for metric, committed in metrics.items():
+    for metric, (committed, abs_floor) in metrics.items():
         if not rows or metric not in rows[0]:
             raise GateError(
                 f"{path}: artifact rows carry no {metric!r} metric (baseline "
                 f"for {name!r} gates on it); keys: {sorted(rows[0]) if rows else []}"
             )
         value = float(rows[0][metric])
-        floor = committed * scale * (1.0 - max_regression)
+        floor = (
+            abs_floor if abs_floor is not None
+            else committed * scale * (1.0 - max_regression)
+        )
         results.append((name, metric, committed, value, floor, value >= floor))
     return results
 

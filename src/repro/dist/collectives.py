@@ -146,6 +146,12 @@ def fleet_sync_grads(grads_per_link, mesh, modes, err_states=None, *, groups=Non
     numerically identical to the ungrouped path (the mesh average is per
     leaf), and wire bytes stay metered PER JOB via :func:`sync_wire_bytes`
     — the per-pair billing the topology pricing model needs.
+
+    Each domain's sync runs under a ``jax.named_scope`` of
+    ``syncdom_g{group}_{mode}``, which lands in the compiled HLO as op
+    metadata — :func:`repro.dist.telemetry.collective_bytes` parses it back
+    out, attributing collective bytes per sync domain (the observability
+    layer's device-side counterpart of the runtime's port tracks).
     """
     n = len(grads_per_link)
     assert n == len(modes), (n, len(modes))
@@ -173,10 +179,12 @@ def fleet_sync_grads(grads_per_link, mesh, modes, err_states=None, *, groups=Non
                 e if e is not None else init_error_state(grads_per_link[i], mesh)
                 for e, i in zip(dom_errs, idx)
             ]
-        out, new_err = sync_grads(
-            [grads_per_link[i] for i in idx], mesh, mode=mode,
-            err_state=dom_errs,
-        )
+        gid = groups[idx[0]] if groups is not None else idx[0]
+        with jax.named_scope(f"syncdom_g{gid}_{mode}"):
+            out, new_err = sync_grads(
+                [grads_per_link[i] for i in idx], mesh, mode=mode,
+                err_state=dom_errs,
+            )
         for k, i in enumerate(idx):
             synced[i] = out[k]
             errs[i] = new_err[k] if new_err is not None else None

@@ -13,11 +13,19 @@ traffic with the standard ring-algorithm byte model:
 all-reduce / reduce-scatter / permute / all-to-all, the per-participant input
 shard for all-gather (output bytes / group). These estimates feed the roofline
 benches and the InterconnectPlanner's cross-pod demand model.
+
+Sync-domain attribution: :func:`repro.dist.collectives.fleet_sync_grads`
+wraps each domain's sync in a ``jax.named_scope`` (``syncdom_g{id}_{mode}``),
+which XLA records as ``op_name`` metadata on every op it lowers to.
+:func:`parse_collectives` carries that label per op and
+:func:`collective_bytes` aggregates a ``by_label`` breakdown — per-domain
+wire bytes from the same compiled artifact, no extra instrumentation.
 """
 from __future__ import annotations
 
 import dataclasses
 import re
+import warnings
 from typing import List
 
 _ELEM_BYTES = {
@@ -39,6 +47,10 @@ _SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
 _GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 _PAIRS_RE = re.compile(r"source_target_pairs=\{(.*?)\}\}")
+_OP_NAME_RE = re.compile(r'op_name="([^"]*)"')
+_SYNCDOM_RE = re.compile(r"syncdom[\w.-]*")
+
+_warned_dtypes: set = set()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +61,7 @@ class CollectiveOp:
     operand_bytes: int
     wire_bytes: float
     line: str = ""
+    label: str = ""  # sync-domain scope from op_name metadata ("" if none)
 
 
 def _shape_bytes(token_type: str, dims: str) -> int:
@@ -56,6 +69,15 @@ def _shape_bytes(token_type: str, dims: str) -> int:
     for d in dims.split(","):
         if d:
             n *= int(d)
+    if token_type not in _ELEM_BYTES and token_type not in _warned_dtypes:
+        # A silent 4-byte guess mis-prices f8/f4-class dtypes 4x; say so
+        # once per dtype instead of quietly skewing the roofline numbers.
+        _warned_dtypes.add(token_type)
+        warnings.warn(
+            f"telemetry: unknown HLO element type {token_type!r} — assuming "
+            f"4 bytes/elem; add it to _ELEM_BYTES for exact byte accounting",
+            stacklevel=2,
+        )
     return n * _ELEM_BYTES.get(token_type, 4)
 
 
@@ -78,6 +100,17 @@ def _group_size(line: str) -> int:
     return 1
 
 
+def _sync_label(line: str) -> str:
+    """The ``syncdom_*`` scope segment of the op's ``op_name`` metadata, or
+    ``""`` — named scopes nest (``jit(fn)/syncdom_g3_compressed/...``), so
+    match the segment, not the full path."""
+    m = _OP_NAME_RE.search(line)
+    if not m:
+        return ""
+    dom = _SYNCDOM_RE.search(m.group(1))
+    return dom.group(0) if dom else ""
+
+
 def parse_collectives(hlo_text: str) -> List[CollectiveOp]:
     ops: List[CollectiveOp] = []
     for raw in hlo_text.splitlines():
@@ -92,6 +125,15 @@ def parse_collectives(hlo_text: str) -> List[CollectiveOp]:
         shapes = _result_shapes(line)
         if not shapes:
             continue
+        for t, _ in shapes:
+            if t not in _ELEM_BYTES and t not in _warned_dtypes:
+                _warned_dtypes.add(t)
+                warnings.warn(
+                    f"telemetry: unknown HLO element type {t!r} in a "
+                    f"collective result — its bytes are NOT counted; add it "
+                    f"to _ELEM_BYTES for exact accounting",
+                    stacklevel=2,
+                )
         total = sum(_shape_bytes(t, d) for t, d in shapes if t in _ELEM_BYTES)
         g = max(1, _group_size(line))
         if kind == "all-gather":
@@ -117,6 +159,7 @@ def parse_collectives(hlo_text: str) -> List[CollectiveOp]:
                 operand_bytes=operand,
                 wire_bytes=wire,
                 line=line[:200],
+                label=_sync_label(line),
             )
         )
     return ops
@@ -126,13 +169,19 @@ def collective_bytes(hlo_text: str) -> dict:
     """Flat aggregate over the module text (loop bodies counted once)."""
     ops = parse_collectives(hlo_text)
     by_kind: dict = {}
+    by_label: dict = {}
     for o in ops:
         k = by_kind.setdefault(o.kind, {"count": 0, "wire_bytes": 0.0})
         k["count"] += 1
         k["wire_bytes"] += o.wire_bytes
+        if o.label:
+            l = by_label.setdefault(o.label, {"count": 0, "wire_bytes": 0.0})
+            l["count"] += 1
+            l["wire_bytes"] += o.wire_bytes
     return {
         "count": len(ops),
         "operand_bytes": sum(o.operand_bytes for o in ops),
         "wire_bytes": sum(o.wire_bytes for o in ops),
         "by_kind": by_kind,
+        "by_label": by_label,
     }

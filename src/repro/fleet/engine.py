@@ -410,6 +410,42 @@ def replay_plan_topology(
         return fn(policy, d_row, vpn, cci)
 
 
+def offline_stream_oracle(
+    arrays: Union[FleetArrays, TopologyArrays],
+    demand,
+    *,
+    policy=None,
+    schedule: Optional[Sequence[Tuple[int, object]]] = None,
+    hours_per_month: int = 730,
+    renew_in_chunks: bool = False,
+) -> Dict[str, jax.Array]:
+    """The offline twin of a streamed prefix — the divergence monitor's oracle.
+
+    Dispatches on the arrays: :class:`TopologyArrays` replay through
+    :func:`replay_plan_topology` with the recorded routing ``schedule``
+    (defaulting to one segment of the arrays' own baked-in routing — so a
+    stream that never rerouted replays against exactly ``plan_topology``);
+    :class:`FleetArrays` run straight through :func:`plan_fleet`
+    (``schedule`` must be ``None`` — a fleet has no routing to swap).
+    Decisions must match a :class:`repro.fleet.runtime.FleetRuntime` stream
+    of the same demand prefix bit for bit.
+    """
+    if isinstance(arrays, TopologyArrays):
+        if schedule is None:
+            schedule = [(0, np.argmax(np.asarray(arrays.routing), axis=0))]
+        return replay_plan_topology(
+            arrays, demand, schedule,
+            policy=policy, hours_per_month=hours_per_month,
+            renew_in_chunks=renew_in_chunks,
+        )
+    assert schedule is None, "fleet mode has no routing schedule"
+    return plan_fleet(
+        arrays, demand,
+        policy=policy, hours_per_month=hours_per_month,
+        renew_in_chunks=renew_in_chunks,
+    )
+
+
 def _month_cum_np(d: np.ndarray, hours_per_month: int) -> np.ndarray:
     """Exclusive within-month prefix volume of one (T,) demand row."""
     T = d.shape[0]

@@ -122,6 +122,8 @@ class ReactivePolicy:
     ``tests/test_policy.py``).
     """
 
+    kind = "reactive"  # plain attr (not a field): obs/report labelling
+
     toggle: ToggleParams
     renew_in_chunks: bool = False  # static: release only at T_cci multiples
 
@@ -148,6 +150,8 @@ class HysteresisPolicy:
     of the θ₁/θ₂ hysteresis, the classic cheap fix for threshold chatter.
     ``up_hold = down_hold = 1`` is exactly :class:`ReactivePolicy`.
     """
+
+    kind = "hysteresis"
 
     toggle: ToggleParams
     up_hold: jax.Array    # int32 ≥ 1 — consecutive hours before requesting
@@ -259,6 +263,8 @@ class ForecastGatedPolicy:
     the slack, ≈ −0% at mirage's wide margin (see :data:`FAMILY_MARGINS`),
     while bursty keeps its large gain under a tight one.
     """
+
+    kind = "forecast"
 
     toggle: ToggleParams
     margin: jax.Array       # confidence margin m ≥ 0 on the forecast gates

@@ -132,6 +132,35 @@ def toggle_events(state_row: np.ndarray) -> Tuple[Tuple[int, ...], Tuple[int, ..
     return tuple(int(t) for t in requests), tuple(int(t) for t in releases)
 
 
+def lease_intervals(
+    state_row: np.ndarray,
+) -> Tuple[Tuple[int, Optional[int], Optional[int]], ...]:
+    """Full lease lifecycles from one row's FSM state trace.
+
+    Returns ``(request_hour, activate_hour, release_hour)`` triples in
+    stream order — the offline twin of the observability layer's live trace
+    slices (:class:`repro.obs.trace.TraceRecorder` renders the same
+    intervals from streamed states). ``activate_hour`` is ``None`` when the
+    stream ended while the row was still WAITING out its provisioning delay;
+    ``release_hour`` is ``None`` when it ended leased.
+    """
+    s = np.asarray(state_row)
+    prev = np.concatenate([[OFF], s[:-1]])
+    requests = np.where((prev == OFF) & (s != OFF))[0]
+    activates = np.where((prev != ON) & (s == ON))[0]
+    releases = np.where((prev == ON) & (s == OFF))[0]
+    out = []
+    for r in requests:
+        ia = np.searchsorted(activates, r)
+        a = int(activates[ia]) if ia < activates.size else None
+        rel = None
+        if a is not None:
+            ir = np.searchsorted(releases, a)
+            rel = int(releases[ir]) if ir < releases.size else None
+        out.append((int(r), a, rel))
+    return tuple(out)
+
+
 def build_report(
     scenario: FleetScenario,
     plan: Dict[str, np.ndarray],

@@ -43,6 +43,7 @@ studies treat as exogenous.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Dict, NamedTuple, Optional, Sequence, Union
 
 import numpy as np
@@ -53,6 +54,7 @@ from jax.experimental import enable_x64
 
 from repro.core.costmodel import tiered_marginal_cost_tables
 from repro.core.planner import COMPRESS_RATIO, collective_mode
+from repro.obs.metrics import flatten_ring, init_ring, reset_ring, update_ring
 
 from .policy import ForecastGatedPolicy, make_policy, predicted_mode_costs
 from .spec import FleetArrays, FleetSpec
@@ -99,6 +101,10 @@ class RuntimeState(NamedTuple):
     ring_vpn: np.ndarray    # (M, Hbuf) past vpn_pref values, slot = hour % Hbuf
     ring_cci: np.ndarray    # (M, Hbuf)
     pred_live: np.ndarray   # (M,) next-tick demand forecast (zeros when unused)
+    metrics: object         # device: obs MetricsRing pytree (None when the
+                            # runtime was built without observability) —
+                            # updated inside the jitted tick, drained onto
+                            # the packed D2H transfer at the obs cadence
 
 
 @dataclasses.dataclass(frozen=True)
@@ -137,7 +143,10 @@ class StreamingForecaster:
         return cls(params=params, scale=scale, h0=h0, pred0=pred0)
 
 
-def _build_step(topology: bool, pred_source: Optional[str], endo: bool):
+def _build_step(
+    topology: bool, pred_source: Optional[str], endo: bool,
+    obs: bool = False, drain: bool = False,
+):
     """This tick's jitted compute: pricing + forecast gates + FSM transition.
 
     The sequential accumulators (prefixes, rings, tier state) stay host-side
@@ -153,9 +162,17 @@ def _build_step(topology: bool, pred_source: Optional[str], endo: bool):
     ``"live"`` (carried SSM state, endogenous-demand capable). ``endo``:
     the packed input carries a separate CCI-path demand vector (endogenous
     two-shape pricing).
+
+    ``obs``: update the carried :class:`repro.obs.metrics.MetricsRing` from
+    this tick's outputs (pure consumers — decisions stay bit-identical with
+    observability on or off). ``drain``: additionally append the flattened
+    ring to the packed result (the drain rides the SAME single D2H transfer)
+    and return a zeroed ring. Both are STATIC — two compiled tick variants
+    per configuration, chosen per tick by the host at the drain cadence, so
+    the hot path stays one dispatch with no per-tick recompiles.
     """
 
-    def step(arrays, policy, fc, fsm, ssm_h, t, routing_idx, packed):
+    def step(arrays, policy, fc, fsm, ssm_h, t, routing_idx, ring, hist_edges, packed):
         f = jnp.result_type(float)
         P = (arrays.pair_capacity if topology else arrays.capacity).shape[0]
         M = arrays.toggle.theta1.shape[0]
@@ -240,7 +257,19 @@ def _build_step(topology: bool, pred_source: Optional[str], endo: bool):
             outs.append(
                 jnp.maximum(jnp.expm1(y_t.astype(f)), 0.0) * fc["scale"]
             )
-        return fsm, ssm_h, t + 1, jnp.concatenate(outs)
+        if obs:
+            ring = update_ring(
+                ring, hist_edges,
+                x_t=x_t, state_t=state_t, vpn_t=vpn_t, cci_t=cci_t,
+                d_pair=d_pair, d_row=d_row, month_cum=month_cum,
+                tier_bounds=arrays.tier_bounds,
+                routing_idx=routing_idx if topology else None,
+                pred_t=pred_t if pred_source is not None else None,
+            )
+            if drain:
+                outs.append(flatten_ring(ring))
+                ring = reset_ring(ring)
+        return fsm, ssm_h, t + 1, ring, jnp.concatenate(outs)
 
     return step
 
@@ -271,6 +300,14 @@ class FleetRuntime:
       hours_per_month: billing calendar. Taken from the SPEC when one is
         given (the kwarg then has no effect — same contract as the offline
         planners); pass pre-stacked arrays to choose it explicitly.
+      obs: observability. ``None`` (default) disables it entirely — no ring
+        in the carry, no timers, the tick compiles without metrics ops.
+        ``True`` or a :class:`repro.obs.observer.ObsConfig` attaches a
+        :class:`repro.obs.observer.FleetObserver` (``self.obs``): device
+        metrics ring drained at ``cadence``, toggle/lease event tracing,
+        live contract monitors, tick profiling. Decisions are bit-identical
+        either way — the ring only consumes tick outputs (property-tested).
+        See :meth:`obs_report` / :meth:`obs_check`.
     """
 
     def __init__(
@@ -282,6 +319,7 @@ class FleetRuntime:
         hours_per_month: int = 730,
         renew_in_chunks: bool = False,
         forecaster: Optional[StreamingForecaster] = None,
+        obs=None,
     ):
         with enable_x64():
             kind = "reactive"
@@ -346,6 +384,17 @@ class FleetRuntime:
             )
             self._h_np = np.asarray(arrays.toggle.h, np.int64)
             self._rows_idx = np.arange(self.n_rows)
+
+            if obs is not None and obs is not False:
+                from repro.obs.observer import FleetObserver, ObsConfig
+
+                cfg = ObsConfig() if obs is True else obs
+                self.obs = FleetObserver(cfg, self)
+                # still under enable_x64 — the edges must stay float64
+                self._obs_edges = jnp.asarray(self.obs.hist_edges, jnp.float64)
+            else:
+                self.obs = None
+                self._obs_edges = None
             self.reset()
 
     def _set_routing_caches(self) -> None:
@@ -360,11 +409,20 @@ class FleetRuntime:
         self._routing_idx_np = np.argmax(self._routing_np, axis=0)
         self._routing_idx = jnp.asarray(self._routing_idx_np, jnp.int32)
 
-    def _step_fn(self, endo: bool):
-        key = (self.topology, self.pred_source, endo)
+    def _step_fn(self, endo: bool, drain: bool = False):
+        key = (self.topology, self.pred_source, endo, self.obs is not None, drain)
         fn = _STEP_CACHE.get(key)
         if fn is None:
-            fn = _STEP_CACHE.setdefault(key, jax.jit(_build_step(*key)))
+            # Donate the metrics ring (arg 7): the caller always replaces it
+            # with the returned ring, and in-place buffer reuse is what makes
+            # the per-tick gauge column write ~free (a non-donated
+            # dynamic-update-slice copies the whole ring every tick).
+            fn = _STEP_CACHE.setdefault(key, jax.jit(
+                _build_step(*key),
+                donate_argnums=(7,) if self.obs is not None else (),
+            ))
+            if self.obs is not None:
+                self.obs.note_compile()
         return fn
 
     def reset(self) -> None:
@@ -380,6 +438,14 @@ class FleetRuntime:
         else:
             ssm_h = jnp.zeros((M, 0), jnp.float32)
             pred_live = z(M)
+        metrics = None
+        if self.obs is not None:
+            with enable_x64():  # f64 ring fields silently downcast outside
+                metrics = init_ring(
+                    M, self.obs.cadence,
+                    self.obs.config.hist_bins, self.obs.n_tiers,
+                )
+            self.obs.on_reset()
         self._state = RuntimeState(
             t=0,
             fsm=fsm,
@@ -394,6 +460,7 @@ class FleetRuntime:
             ring_vpn=z(M, self.hbuf),
             ring_cci=z(M, self.hbuf),
             pred_live=pred_live,
+            metrics=metrics,
         )
 
     @property
@@ -407,6 +474,7 @@ class FleetRuntime:
         the two paths carry differently-compressed traffic). Returns this
         hour's per-row decision/cost arrays; the FSM state that SERVES the
         hour is ``out["state"]`` (map it with :func:`modes`)."""
+        t0 = time.perf_counter() if self.obs is not None else 0.0
         st = self._state
         t = st.t
         M, P = self.n_rows, self.n_demand_rows
@@ -428,10 +496,15 @@ class FleetRuntime:
         parts += [month_cum, r_vpn, r_cci]
         if self.pred_source == "live":
             parts.append(st.pred_live)
+        drain = (
+            self.obs is not None and (t + 1) % self.obs.cadence == 0
+        )
+        packed_in = np.concatenate(parts)
         with enable_x64():
-            fsm, ssm_h, t_dev, packed_out = self._step_fn(endo)(
+            fsm, ssm_h, t_dev, ring, packed_out = self._step_fn(endo, drain)(
                 self.arrays, self.policy, self._fc, st.fsm, st.ssm_h,
-                st.t_dev, st.routing_idx, jax.device_put(np.concatenate(parts)),
+                st.t_dev, st.routing_idx, st.metrics, self._obs_edges,
+                jax.device_put(packed_in),
             )
         po = np.asarray(packed_out)
         x = po[0:M].astype(np.int64)
@@ -439,6 +512,7 @@ class FleetRuntime:
         vpn_t = po[2 * M:3 * M]
         cci_t = po[3 * M:4 * M]
         d_pair = po[4 * M:4 * M + P]
+        base = 4 * M + P
 
         # Commit this tick: ring slots take pref[t] BEFORE the prefixes
         # absorb this hour's costs (the exclusive-prefix convention).
@@ -448,14 +522,16 @@ class FleetRuntime:
         np.add(st.vpn_pref, vpn_t, out=st.vpn_pref)
         np.add(st.cci_pref, cci_t, out=st.cci_pref)
         np.add(st.dcum, d_pair, out=st.dcum)
+        if self.pred_source == "live":
+            pred_live = po[base:base + M]
+            base += M
+        else:
+            pred_live = st.pred_live
         self._state = st._replace(
             t=t + 1, fsm=fsm, ssm_h=ssm_h, t_dev=t_dev,
-            pred_live=(
-                po[4 * M + P:5 * M + P] if self.pred_source == "live"
-                else st.pred_live
-            ),
+            pred_live=pred_live, metrics=ring,
         )
-        return {
+        out = {
             "x": x,                        # (rows,) 0/1 — CCI serving this hour
             "state": state,                # (rows,) FSM state codes
             "r_vpn": r_vpn,
@@ -464,6 +540,15 @@ class FleetRuntime:
             "cci_cost": cci_t,
             "cost": np.where(x == 1, cci_t, vpn_t),
         }
+        if self.obs is not None:
+            self.obs.record_step(
+                t, out, d_pair=d_pair, demand_t=d, endo=endo,
+                h2d_bytes=packed_in.nbytes, d2h_bytes=po.nbytes,
+                dt_s=time.perf_counter() - t0,
+            )
+            if drain:
+                self.obs.record_drain(t + 1, po[base:])
+        return out
 
     def run(self, demand, *, cci_demand=None) -> Dict[str, np.ndarray]:
         """Convenience: stream a whole (rows, T) matrix tick by tick and stack
@@ -503,6 +588,7 @@ class FleetRuntime:
             "reroute() applies to topology (shared-port) mode; a fleet has "
             "no routing to swap"
         )
+        old_idx = self._routing_idx_np.copy()
         M, P = self.n_rows, self.n_demand_rows
         r = np.asarray(routing)
         with enable_x64():
@@ -527,6 +613,40 @@ class FleetRuntime:
         self._state = self._state._replace(
             routing=R, routing_idx=self._routing_idx
         )
+        if self.obs is not None:
+            self.obs.record_reroute(self.t, old_idx, self._routing_idx_np)
+
+    # --- observability surface (only when built with obs=) ------------------
+
+    def _flush_obs(self) -> None:
+        """Drain a partial metrics window host-side (one extra D2H — only at
+        report/check time, never on the per-tick hot path)."""
+        if self.obs is None:
+            return
+        ring = self._state.metrics
+        if int(ring.small[0]) == 0:
+            return
+        with enable_x64():
+            vec = np.asarray(flatten_ring(ring))
+            self._state = self._state._replace(metrics=reset_ring(ring))
+        self.obs.record_drain(self.t, vec)
+
+    def obs_report(self):
+        """Flush pending metrics and build the :class:`repro.obs.ObsReport`
+        (aggregate counters, cost quantiles, tick-latency profile, monitor
+        summaries). Requires the runtime to have been built with ``obs=``."""
+        assert self.obs is not None, "runtime built without obs="
+        self._flush_obs()
+        return self.obs.report()
+
+    def obs_check(self, *, final: bool = True) -> None:
+        """Flush pending metrics and run every enabled contract monitor NOW,
+        raising :class:`repro.obs.ContractViolation` on the first breach.
+        ``final=True`` additionally arms end-of-run-only checks (regret
+        bounds that are meaningless mid-stream)."""
+        assert self.obs is not None, "runtime built without obs="
+        self._flush_obs()
+        self.obs.check(final=final)
 
     def port_occupancy(self) -> np.ndarray:
         """(M,) pairs attached per port under the CURRENT routing (all-ones
@@ -622,6 +742,7 @@ class ElasticFleetPlanner:
         self.gb = np.zeros(p)
         self.gb_saved = np.zeros(p)
         self.on_hours = np.zeros(n, np.int64)
+        self._dom_sig = None  # last (groups, modes) signature traced
 
     def sync_groups(self) -> np.ndarray:
         """(P,) leased-sync-domain id per actuator: the routed port index in
@@ -647,6 +768,17 @@ class ElasticFleetPlanner:
         self.cost_vpn_only += vpn_c
         self.cost_cci_only += cci_c
         modes = self.runtime.modes(out)
+        if self.runtime.obs is not None:
+            # Sync-domain fusion change events: a domain is a (port, mode)
+            # bucket of actuators; trace only when the partition changes.
+            groups = self.sync_groups()
+            sig = (groups.tobytes(), "".join(m[0] for m in modes))
+            if sig != self._dom_sig:
+                n_dom = len(set(zip(groups.tolist(), modes)))
+                self.runtime.obs.record_sync_domains(
+                    self.runtime.t - 1, n_dom, len(modes)
+                )
+                self._dom_sig = sig
         on_act = np.asarray([m == "hierarchical" for m in modes])
         self.gb += np.where(on_act, raw_gb, raw_gb / self.compress_ratio)
         self.gb_saved += np.where(on_act, 0.0, raw_gb - raw_gb / self.compress_ratio)

@@ -1,0 +1,62 @@
+"""Profiling hooks: tick latency, transfer bytes, compile counters.
+
+Host-side and allocation-light: one ``perf_counter`` pair per tick (taken by
+the runtime, only when observability is on) appended to a float list, plus
+integer byte counters for the packed H2D/D2H transfers the tick pays. The
+latency distribution is the serving-loop replanning latency the paper's
+online algorithm would impose per simulated hour — p50/p95/p99 are what the
+runtime bench gates on, and a p99 ≫ p50 is the classic recompile /
+device-sync smoking gun (the compile counter attributes it).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+
+class TickProfiler:
+    def __init__(self):
+        self.tick_s: List[float] = []
+        self.h2d_bytes = 0
+        self.d2h_bytes = 0
+        self.drains = 0
+        self.compiles = 0      # new jitted tick variants built while stepping
+
+    def record(self, dt_s: float, h2d_bytes: int, d2h_bytes: int) -> None:
+        self.tick_s.append(float(dt_s))
+        self.h2d_bytes += int(h2d_bytes)
+        self.d2h_bytes += int(d2h_bytes)
+
+    def note_compile(self) -> None:
+        self.compiles += 1
+
+    def note_drain(self) -> None:
+        self.drains += 1
+
+    @property
+    def ticks(self) -> int:
+        return len(self.tick_s)
+
+    def percentiles(self, qs: Sequence[float] = (50, 95, 99)) -> Dict[str, float]:
+        """Tick-latency percentiles in MICROSECONDS (µs)."""
+        if not self.tick_s:
+            return {f"p{int(q)}": float("nan") for q in qs}
+        arr = np.asarray(self.tick_s) * 1e6
+        return {f"p{int(q)}": float(np.percentile(arr, q)) for q in qs}
+
+    def summary(self) -> dict:
+        pct = self.percentiles()
+        return {
+            "ticks": self.ticks,
+            "tick_us_p50": pct["p50"],
+            "tick_us_p95": pct["p95"],
+            "tick_us_p99": pct["p99"],
+            "tick_us_mean": (
+                float(np.mean(self.tick_s) * 1e6) if self.tick_s else float("nan")
+            ),
+            "h2d_bytes": self.h2d_bytes,
+            "d2h_bytes": self.d2h_bytes,
+            "drains": self.drains,
+            "compiles": self.compiles,
+        }

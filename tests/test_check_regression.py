@@ -152,3 +152,52 @@ def test_extra_metrics_gated(tmp_path, capsys):
     )
     assert main([missing, "--baselines", baselines]) == 1
     assert "topology_port_steps_per_s" in capsys.readouterr().out
+
+
+def test_extra_metrics_absolute_floor(tmp_path, capsys):
+    """The {"value": v, "floor": f} dict form declares an ABSOLUTE floor that
+    ignores --scale — for machine-independent metrics (the runtime bench's
+    bit_exact_vs_offline indicator), where a runner-speed discount would
+    make the gate vacuous."""
+    baselines = _write(tmp_path / "baselines.json", {
+        "runtime": {
+            "metric": "link_steps_per_s", "value": 1e6,
+            "extra_metrics": {
+                "bit_exact_vs_offline": {"value": 1.0, "floor": 1.0},
+            },
+        }
+    })
+    ok = _write(
+        tmp_path / "BENCH_runtime.json",
+        [{"link_steps_per_s": 9.9e5, "bit_exact_vs_offline": True}],
+    )
+    # --scale discounts the throughput floor but NOT the absolute one.
+    assert main([ok, "--baselines", baselines, "--scale", "0.35"]) == 0
+
+    from benchmarks.check_regression import GateError, check_artifact
+
+    with open(baselines) as f:
+        b = json.load(f)
+    rows = check_artifact(ok, b, scale=0.35, max_regression=0.30)
+    by_metric = {metric: floor for _, metric, _, _, floor, _ in rows}
+    assert by_metric["link_steps_per_s"] == pytest.approx(1e6 * 0.35 * 0.7)
+    assert by_metric["bit_exact_vs_offline"] == 1.0  # scale had no effect
+
+    bad = _write(
+        tmp_path / "BENCH_runtime.json",
+        [{"link_steps_per_s": 9.9e5, "bit_exact_vs_offline": False}],
+    )
+    assert main([bad, "--baselines", baselines, "--scale", "0.35"]) == 1
+    assert "REGRESSION" in capsys.readouterr().out
+
+    # A dict entry missing its floor is a config error with a clear message.
+    broken = _write(tmp_path / "baselines2.json", {
+        "runtime": {
+            "metric": "link_steps_per_s", "value": 1e6,
+            "extra_metrics": {"bit_exact_vs_offline": {"value": 1.0}},
+        }
+    })
+    with open(broken) as f:
+        b2 = json.load(f)
+    with pytest.raises(GateError, match="floor"):
+        check_artifact(ok, b2, scale=1.0, max_regression=0.30)

@@ -183,6 +183,51 @@ ENTRY %main (p: f32[64,64]) -> f32[64,64] {
     assert agg["count"] == 3
 
 
+def test_telemetry_sync_domain_labels():
+    """fleet_sync_grads wraps each domain in a syncdom_* named scope; the
+    parser must carry the scope SEGMENT (not the whole nested op_name path)
+    per op and aggregate a per-domain wire-byte breakdown."""
+    hlo = """
+ENTRY %main (p: f32[64,64]) -> f32[64,64] {
+  %p = f32[64,64]{1,0} parameter(0)
+  %a = f32[64,64]{1,0} all-reduce(%p), channel_id=1, replica_groups={{0,1,2,3}}, to_apply=%add, metadata={op_name="jit(step)/syncdom_g7_hierarchical/psum"}
+  %b = f32[64,64]{1,0} all-reduce(%a), channel_id=2, replica_groups={{0,1,2,3}}, to_apply=%add, metadata={op_name="jit(step)/syncdom_g7_hierarchical/psum2"}
+  ROOT %c = f32[64,64]{1,0} all-reduce(%b), channel_id=3, replica_groups={{0,1}}, to_apply=%add, metadata={op_name="jit(step)/syncdom_g9_compressed/psum"}
+}
+"""
+    ops = parse_collectives(hlo)
+    assert [o.label for o in ops] == [
+        "syncdom_g7_hierarchical", "syncdom_g7_hierarchical",
+        "syncdom_g9_compressed",
+    ]
+    agg = collective_bytes(hlo)
+    assert set(agg["by_label"]) == {
+        "syncdom_g7_hierarchical", "syncdom_g9_compressed"
+    }
+    assert agg["by_label"]["syncdom_g7_hierarchical"]["count"] == 2
+    # Unlabeled ops aggregate by kind but never invent a domain.
+    plain = 'ENTRY %m { %r = f32[8]{0} all-reduce(%p), replica_groups={{0,1}}, to_apply=%add }'
+    assert collective_bytes(plain)["by_label"] == {}
+
+
+def test_telemetry_unknown_dtype_warns_not_silent():
+    """An element type missing from _ELEM_BYTES must WARN (once per dtype),
+    not silently price the op at a 4-byte guess."""
+    import warnings as _warnings
+
+    from repro.dist import telemetry
+
+    hlo = 'ENTRY %m { %r = f4e2m1[256]{0} all-reduce(%p), replica_groups={{0,1}}, to_apply=%add }'
+    telemetry._warned_dtypes.discard("f4e2m1")
+    with pytest.warns(UserWarning, match="f4e2m1"):
+        parse_collectives(hlo)
+    # Once per dtype: a second parse stays quiet.
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error")
+        parse_collectives(hlo)
+    telemetry._warned_dtypes.discard("f4e2m1")
+
+
 def test_hlo_analysis_counts_loop_trip_counts():
     import jax.numpy as jnp
 

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import enable_x64
 
-from repro.fleet import (
+from repro.fleet.plan import (
     FleetSpec,
     build_fleet_scenario,
     build_report,

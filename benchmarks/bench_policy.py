@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import enable_x64
 
-from repro.fleet import (
+from repro.fleet.plan import (
     FAMILIES,
     FAMILY_MARGINS,
     build_topology_report,

@@ -49,14 +49,13 @@ import numpy as np
 
 import jax
 
-from repro.fleet import (
-    FleetRuntime,
+from repro.fleet.plan import (
     build_fleet_scenario,
     build_topology_scenario,
     optimize_routing,
     plan_fleet,
-    streaming_forecast_policy,
 )
+from repro.fleet.stream import FleetRuntime, streaming_forecast_policy
 
 from ._util import save_rows, write_bench_artifact
 

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import enable_x64
 
-from repro.fleet import (
+from repro.fleet.plan import (
     build_topology_report,
     build_topology_scenario,
     optimize_routing,
@@ -89,7 +89,7 @@ def run(
         # decisions across the two aggregations directly would be flaky at
         # scale: summation order differs at ~1e-16 relative, enough to flip
         # a θ comparison that lands within an ulp of equality.
-        from repro.fleet import topology_port_costs_reference
+        from repro.fleet.plan import topology_port_costs_reference
 
         series = {
             "vpn": np.asarray(plan["vpn_hourly"]),

@@ -15,6 +15,7 @@ from . import (
     bench_bursty,
     bench_constant,
     bench_fleet,
+    bench_gateway,
     bench_kernels,
     bench_measurements,
     bench_mirage,
@@ -54,6 +55,9 @@ BENCHES = [
     ("runtime_streaming", lambda: bench_runtime.run(
         512 if FAST else 2048, 600 if FAST else 3000,
         history=300 if FAST else 600,
+    )),
+    ("gateway_multitenant", lambda: bench_gateway.run(
+        64 if FAST else 256, 16 if FAST else 32, 160 if FAST else 400,
     )),
     ("kernels_tiered_cost", lambda: bench_kernels.run(
         8 if FAST else 128, 1024 if FAST else 8704,

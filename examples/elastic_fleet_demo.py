@@ -39,7 +39,7 @@ from repro.configs import get_config, reduce_config
 from repro.core.planner import dci_scenario
 from repro.data import DataConfig, SyntheticTokenPipeline
 from repro.dist.collectives import fleet_sync_grads, sync_wire_bytes
-from repro.fleet import ElasticFleetPlanner
+from repro.fleet.stream import ElasticFleetPlanner
 from repro.fleet.spec import fleet_from_params
 from repro.launch.mesh import make_host_mesh
 from repro.models import lm

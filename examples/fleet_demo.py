@@ -9,7 +9,12 @@ Run:  PYTHONPATH=src python examples/fleet_demo.py
 """
 import numpy as np
 
-from repro.fleet import build_fleet_scenario, build_report, plan_fleet, toggle_events
+from repro.fleet.plan import (
+    build_fleet_scenario,
+    build_report,
+    plan_fleet,
+    toggle_events,
+)
 
 N_LINKS = 32
 HORIZON = 4380  # half a year, hourly

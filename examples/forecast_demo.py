@@ -16,7 +16,7 @@ import numpy as np
 import jax.numpy as jnp
 from jax.experimental import enable_x64
 
-from repro.fleet import (
+from repro.fleet.plan import (
     build_topology_report,
     build_topology_scenario,
     forecast_topology_policy,

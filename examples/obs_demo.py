@@ -33,7 +33,8 @@ import sys
 
 import numpy as np
 
-from repro.fleet import FleetRuntime, build_topology_scenario, optimize_routing
+from repro.fleet.plan import build_topology_scenario, optimize_routing
+from repro.fleet.stream import FleetRuntime
 from repro.obs import ContractViolation, ObsConfig
 
 HORIZON = 500

@@ -24,12 +24,12 @@ Run:  PYTHONPATH=src python examples/reroute_demo.py
 """
 import numpy as np
 
-from repro.fleet import (
-    FleetRuntime,
+from repro.fleet.plan import (
     build_reroute_scenario,
     optimize_routing,
     replay_plan_topology,
 )
+from repro.fleet.stream import FleetRuntime
 
 HORIZON = 2000
 SHIFT = 800          # the demand regime swap (unknown to the planner)

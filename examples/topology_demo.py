@@ -10,7 +10,7 @@ Run:  PYTHONPATH=src python examples/topology_demo.py
 """
 import numpy as np
 
-from repro.fleet import (
+from repro.fleet.plan import (
     build_topology_report,
     build_topology_scenario,
     optimize_routing,

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import functools
 import math
+import re
 
 import jax
 import jax.numpy as jnp
@@ -126,7 +127,26 @@ def sync_wire_bytes(grads, mode: str) -> int:
     return total
 
 
-def fleet_sync_grads(grads_per_link, mesh, modes, err_states=None, *, groups=None):
+def sync_domain_label(gid, mode: str, *, tenant=None) -> str:
+    """The ``named_scope`` label of one leased sync domain.
+
+    Must stay parseable by :data:`repro.dist.telemetry._SYNCDOM_RE`
+    (``syncdom[\\w.-]*`` — a single ``[\\w.-]`` token prefixed ``syncdom``),
+    so the optional multi-tenant gateway attribution rides INSIDE the token:
+    ``syncdom_t.<tenant>.g{gid}_{mode}`` — telemetry built before tenants
+    existed keeps attributing bytes per domain, and per-tenant breakdowns
+    fall out of the same label. Tenant names are sanitized to the telemetry
+    charset (anything else becomes ``-``).
+    """
+    t = ""
+    if tenant is not None:
+        t = "t." + re.sub(r"[^\w.-]", "-", str(tenant)) + "."
+    return f"syncdom_{t}g{gid}_{mode}"
+
+
+def fleet_sync_grads(
+    grads_per_link, mesh, modes, err_states=None, *, groups=None, tenant=None
+):
     """Actuate a fleet plan: job ``i``'s gradients sync under ``modes[i]``.
 
     The bridge between :class:`repro.fleet.runtime.ElasticFleetPlanner` and
@@ -148,10 +168,13 @@ def fleet_sync_grads(grads_per_link, mesh, modes, err_states=None, *, groups=Non
     — the per-pair billing the topology pricing model needs.
 
     Each domain's sync runs under a ``jax.named_scope`` of
-    ``syncdom_g{group}_{mode}``, which lands in the compiled HLO as op
-    metadata — :func:`repro.dist.telemetry.collective_bytes` parses it back
-    out, attributing collective bytes per sync domain (the observability
-    layer's device-side counterpart of the runtime's port tracks).
+    :func:`sync_domain_label` (``syncdom_g{group}_{mode}``, with an optional
+    ``tenant=`` owner embedded as ``syncdom_t.<tenant>.g{group}_{mode}`` —
+    the multi-tenant gateway labels each tenant's actuation this way), which
+    lands in the compiled HLO as op metadata —
+    :func:`repro.dist.telemetry.collective_bytes` parses it back out,
+    attributing collective bytes per sync domain (the observability layer's
+    device-side counterpart of the runtime's port tracks).
     """
     n = len(grads_per_link)
     assert n == len(modes), (n, len(modes))
@@ -180,7 +203,7 @@ def fleet_sync_grads(grads_per_link, mesh, modes, err_states=None, *, groups=Non
                 for e, i in zip(dom_errs, idx)
             ]
         gid = groups[idx[0]] if groups is not None else idx[0]
-        with jax.named_scope(f"syncdom_g{gid}_{mode}"):
+        with jax.named_scope(sync_domain_label(gid, mode, tenant=tenant)):
             out, new_err = sync_grads(
                 [grads_per_link[i] for i in idx], mesh, mode=mode,
                 err_state=dom_errs,

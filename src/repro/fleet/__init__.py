@@ -25,99 +25,119 @@ computation. Mapping back to the paper:
 * §VII-A multi-pair setting ("one CCI lease serves several region pairs")
   ->  :mod:`repro.fleet.topology` + :func:`engine.plan_topology`: region
   pairs route onto shared CCI ports at colocation facilities through a
-  traceable one-hot routing matrix; a greedy co-optimizer
-  (:func:`topology.optimize_routing`) packs leases, and ToggleCCI toggles
-  each PORT on its pair-aggregated window costs. The identity routing
-  reproduces ``plan_fleet`` bit-for-bit. :func:`topology.refine_routing`
-  adds a bounded pair-move local search on realized plan costs.
-* toggle decisions are a *pluggable policy layer* (:mod:`repro.fleet.policy`):
-  the paper's reactive FSM (default, bit-for-bit the old behavior), a
-  hysteresis/debounce ablation, and an SSM-forecast-gated policy
-  (:mod:`repro.models.ssm` demand head trained on port-aggregated history)
-  that fires lease requests ahead of sustained regime shifts — all three
-  run through ONE shared :func:`policy.policy_scan` kernel, the policy a
-  vmapped operand of the same compiled planners.
+  traceable one-hot routing matrix, toggled per PORT on pair-aggregated
+  window costs.
+
+**The public surface is versioned into three namespaces** (since the
+multi-tenant gateway release):
+
+* :mod:`repro.fleet.plan`    — offline: specs, engines, policies,
+  scenarios, reports;
+* :mod:`repro.fleet.stream`  — online: ``FleetRuntime``/``RuntimeConfig``,
+  the live forecaster, the elastic planner (the multi-tenant pooled
+  front-end is :mod:`repro.gateway`);
+* :mod:`repro.fleet.observe` — metrics rings, monitors, tracing.
 
 Quick start::
 
-    from repro.fleet import build_fleet_scenario, plan_fleet, build_report
-    sc = build_fleet_scenario(128, horizon=8760, seed=0)
-    plan = plan_fleet(sc.fleet, sc.demand)          # ONE jit call
-    print(build_report(sc, plan).render_text())
+    from repro.fleet import plan
+    sc = plan.build_fleet_scenario(128, horizon=8760, seed=0)
+    out = plan.plan_fleet(sc.fleet, sc.demand)          # ONE jit call
+    print(plan.build_report(sc, out).render_text())
 
     # Multi-pair: shared-port leases over a facility graph.
-    from repro.fleet import build_topology_scenario, optimize_routing
-    from repro.fleet import plan_topology, build_topology_report
-    ts = build_topology_scenario(64, n_facilities=4, seed=0)
-    routing = optimize_routing(ts.topo, ts.demand)
-    tplan = plan_topology(ts.topo, ts.demand, routing=routing)
-    print(build_topology_report(ts, tplan, routing).render_text())
+    ts = plan.build_topology_scenario(64, n_facilities=4, seed=0)
+    routing = plan.optimize_routing(ts.topo, ts.demand)
+    tplan = plan.plan_topology(ts.topo, ts.demand, routing=routing)
+    print(plan.build_topology_report(ts, tplan, routing).render_text())
+
+    # Streaming, one hour per call:
+    from repro.fleet import stream
+    rt = stream.FleetRuntime.from_config(
+        ts.topo, stream.RuntimeConfig(routing=routing))
+
+The old flat spellings (``from repro.fleet import plan_fleet``) keep
+working for one release through module ``__getattr__`` shims that raise
+:class:`DeprecationWarning`; import from the namespaces above instead.
 """
-from .engine import (  # noqa: F401
-    RoutedSeries,
-    fleet_oracle,
-    plan_fleet,
-    plan_fleet_reference,
-    plan_topology,
-    plan_topology_reference,
-    replay_plan_topology,
-    routed_cost_series,
-    topology_oracle,
-    topology_port_costs_reference,
-)
-from .policy import (  # noqa: F401
-    FAMILY_MARGINS,
-    POLICY_KINDS,
-    ForecastGatedPolicy,
-    family_margins,
-    fit_cost_coef,
-    HysteresisPolicy,
-    ReactivePolicy,
-    forecast_fleet_policy,
-    forecast_gated_policy,
-    forecast_port_demand,
-    forecast_topology_policy,
-    hysteresis_policy,
-    make_policy,
-    policy_scan,
-    reactive_policy,
-)
-from .runtime import (  # noqa: F401
-    ElasticFleetPlanner,
-    FleetPlannerReport,
-    FleetRuntime,
-    StreamingForecaster,
-    streaming_forecast_policy,
-)
-from .report import (  # noqa: F401
-    FleetReport,
-    LinkReport,
-    PortReport,
-    TopologyReport,
-    build_report,
-    build_topology_report,
-    toggle_events,
-)
-from .scenario import (  # noqa: F401
-    FAMILIES,
-    FleetScenario,
-    TopologyScenario,
-    build_fleet_scenario,
-    build_reroute_scenario,
-    build_topology_scenario,
-    link_capacity_gb_hr,
-    port_capacity_gb_hr,
-    vlan_access_gb_hr,
-)
-from .spec import FleetArrays, FleetSpec, LinkSpec, fleet_from_params  # noqa: F401
-from .topology import (  # noqa: F401
-    PairSpec,
-    PortSpec,
-    TopologyArrays,
-    TopologySpec,
-    dedicated_fleet,
-    identity_topology,
-    optimize_routing,
-    refine_routing,
-    routing_matrix,
-)
+import importlib
+import warnings
+
+from . import observe, plan, stream  # noqa: F401
+
+__all__ = ["observe", "plan", "stream"]
+
+# Legacy flat surface -> defining submodule. Every pre-namespace name stays
+# importable (the deprecation contract) but warns; the map is the test's
+# single source of truth for what must keep resolving.
+_LEGACY = {
+    "repro.fleet.engine": (
+        "RoutedSeries", "fleet_oracle", "plan_fleet",
+        "plan_fleet_reference", "plan_topology",
+        "plan_topology_reference", "replay_plan_topology",
+        "routed_cost_series", "topology_oracle",
+        "topology_port_costs_reference",
+    ),
+    "repro.fleet.policy": (
+        "FAMILY_MARGINS", "POLICY_KINDS", "ForecastGatedPolicy",
+        "HysteresisPolicy", "ReactivePolicy", "family_margins",
+        "fit_cost_coef", "forecast_fleet_policy", "forecast_gated_policy",
+        "forecast_port_demand", "forecast_topology_policy",
+        "hysteresis_policy", "make_policy", "policy_scan",
+        "reactive_policy",
+    ),
+    "repro.fleet.runtime": (
+        "ElasticFleetPlanner", "FleetPlannerReport", "FleetRuntime",
+        "StreamingForecaster", "streaming_forecast_policy",
+    ),
+    "repro.fleet.report": (
+        "FleetReport", "LinkReport", "PortReport", "TopologyReport",
+        "build_report", "build_topology_report", "toggle_events",
+    ),
+    "repro.fleet.scenario": (
+        "FAMILIES", "FleetScenario", "TopologyScenario",
+        "build_fleet_scenario", "build_reroute_scenario",
+        "build_topology_scenario", "link_capacity_gb_hr",
+        "port_capacity_gb_hr", "vlan_access_gb_hr",
+    ),
+    "repro.fleet.spec": (
+        "FleetArrays", "FleetSpec", "LinkSpec", "fleet_from_params",
+    ),
+    "repro.fleet.topology": (
+        "PairSpec", "PortSpec", "TopologyArrays", "TopologySpec",
+        "dedicated_fleet", "identity_topology", "optimize_routing",
+        "refine_routing", "routing_matrix",
+    ),
+}
+
+_LEGACY_HOME = {
+    name: module for module, names in _LEGACY.items() for name in names
+}
+
+_NAMESPACE_OF = {
+    "repro.fleet.engine": "repro.fleet.plan",
+    "repro.fleet.policy": "repro.fleet.plan",
+    "repro.fleet.report": "repro.fleet.plan",
+    "repro.fleet.scenario": "repro.fleet.plan",
+    "repro.fleet.spec": "repro.fleet.plan",
+    "repro.fleet.topology": "repro.fleet.plan",
+    "repro.fleet.runtime": "repro.fleet.stream",
+}
+
+
+def __getattr__(name: str):
+    home = _LEGACY_HOME.get(name)
+    if home is None:
+        raise AttributeError(f"module 'repro.fleet' has no attribute {name!r}")
+    warnings.warn(
+        f"importing {name!r} from the flat 'repro.fleet' namespace is "
+        f"deprecated; use '{_NAMESPACE_OF[home]}.{name}' (or the defining "
+        f"module '{home}') instead",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return getattr(importlib.import_module(home), name)
+
+
+def __dir__():
+    return sorted(set(__all__) | set(_LEGACY_HOME))

@@ -1,0 +1,61 @@
+"""``repro.fleet.observe`` — the OBSERVABILITY surface (v1 facade).
+
+One import point for everything a fleet operator watches: the device-side
+metrics ring (and its tenant-axis pooled form), drained-window records,
+contract monitors (including the gateway's per-tenant SLO/billing
+reconciler), the runtime observer, tracing and profiling. These re-export
+:mod:`repro.obs` — the implementation package, which remains importable
+directly — so streaming code can stay within the ``repro.fleet.*``
+namespaces (:mod:`repro.fleet.plan` / :mod:`repro.fleet.stream` / here).
+"""
+from repro.obs import (  # noqa: F401
+    BillingMonitor,
+    CalibrationMonitor,
+    ContractViolation,
+    DivergenceMonitor,
+    DrainedMetrics,
+    FleetObserver,
+    MetricsRing,
+    ObsConfig,
+    ObsReport,
+    RegretMonitor,
+    TenantSLOMonitor,
+    TickProfiler,
+    TraceRecorder,
+    default_hist_edges,
+    flatten_ring,
+    init_ring,
+    init_tenant_ring,
+    reset_ring,
+    reset_ring_slot,
+    ring_layout,
+    ring_size,
+    trace_from_plan,
+    update_ring,
+)
+
+__all__ = [
+    "BillingMonitor",
+    "CalibrationMonitor",
+    "ContractViolation",
+    "DivergenceMonitor",
+    "DrainedMetrics",
+    "FleetObserver",
+    "MetricsRing",
+    "ObsConfig",
+    "ObsReport",
+    "RegretMonitor",
+    "TenantSLOMonitor",
+    "TickProfiler",
+    "TraceRecorder",
+    "default_hist_edges",
+    "flatten_ring",
+    "init_ring",
+    "init_tenant_ring",
+    "reset_ring",
+    "reset_ring_slot",
+    "ring_layout",
+    "ring_size",
+    "trace_from_plan",
+    "update_ring",
+]

@@ -1,0 +1,106 @@
+"""``repro.fleet.plan`` — the OFFLINE planning surface (v1 facade).
+
+Everything that builds and solves a whole-horizon planning problem in one
+jitted call: fleet/topology specs and their stacked array forms, the
+batched engines and oracles, the pluggable policy layer, scenario
+generators, and report rendering. The streaming twins live in
+:mod:`repro.fleet.stream`; observability in :mod:`repro.fleet.observe`.
+
+This module is a thin, versioned re-export: the implementations stay in
+their submodules (``repro.fleet.engine`` etc.), which remain importable
+directly and are NOT deprecated — only the old flat ``from repro.fleet
+import X`` spellings are (they warn; see ``repro.fleet.__init__``).
+"""
+from .engine import (  # noqa: F401
+    RoutedSeries,
+    fleet_oracle,
+    plan_fleet,
+    plan_fleet_reference,
+    plan_topology,
+    plan_topology_reference,
+    replay_plan_topology,
+    routed_cost_series,
+    topology_oracle,
+    topology_port_costs_reference,
+)
+from .policy import (  # noqa: F401
+    FAMILY_MARGINS,
+    POLICY_KINDS,
+    ForecastGatedPolicy,
+    HysteresisPolicy,
+    ReactivePolicy,
+    family_margins,
+    fit_cost_coef,
+    forecast_fleet_policy,
+    forecast_gated_policy,
+    forecast_port_demand,
+    forecast_topology_policy,
+    hysteresis_policy,
+    make_policy,
+    policy_scan,
+    reactive_policy,
+)
+from .report import (  # noqa: F401
+    FleetReport,
+    LinkReport,
+    PortReport,
+    TopologyReport,
+    build_report,
+    build_topology_report,
+    toggle_events,
+)
+from .scenario import (  # noqa: F401
+    FAMILIES,
+    FleetScenario,
+    TopologyScenario,
+    build_fleet_scenario,
+    build_reroute_scenario,
+    build_topology_scenario,
+    link_capacity_gb_hr,
+    port_capacity_gb_hr,
+    vlan_access_gb_hr,
+)
+from .spec import (  # noqa: F401
+    FleetArrays,
+    FleetSpec,
+    LinkSpec,
+    fleet_from_params,
+)
+from .topology import (  # noqa: F401
+    PairSpec,
+    PortSpec,
+    TopologyArrays,
+    TopologySpec,
+    dedicated_fleet,
+    identity_topology,
+    optimize_routing,
+    refine_routing,
+    routing_matrix,
+)
+
+__all__ = [
+    # specs
+    "FleetArrays", "FleetSpec", "LinkSpec", "fleet_from_params",
+    "PairSpec", "PortSpec", "TopologyArrays", "TopologySpec",
+    "dedicated_fleet", "identity_topology", "optimize_routing",
+    "refine_routing", "routing_matrix",
+    # engines
+    "RoutedSeries", "fleet_oracle", "plan_fleet", "plan_fleet_reference",
+    "plan_topology", "plan_topology_reference", "replay_plan_topology",
+    "routed_cost_series", "topology_oracle",
+    "topology_port_costs_reference",
+    # policies
+    "FAMILY_MARGINS", "POLICY_KINDS", "ForecastGatedPolicy",
+    "HysteresisPolicy", "ReactivePolicy", "family_margins",
+    "fit_cost_coef", "forecast_fleet_policy", "forecast_gated_policy",
+    "forecast_port_demand", "forecast_topology_policy",
+    "hysteresis_policy", "make_policy", "policy_scan", "reactive_policy",
+    # scenarios
+    "FAMILIES", "FleetScenario", "TopologyScenario",
+    "build_fleet_scenario", "build_reroute_scenario",
+    "build_topology_scenario", "link_capacity_gb_hr",
+    "port_capacity_gb_hr", "vlan_access_gb_hr",
+    # reports
+    "FleetReport", "LinkReport", "PortReport", "TopologyReport",
+    "build_report", "build_topology_report", "toggle_events",
+]

@@ -143,6 +143,57 @@ class StreamingForecaster:
         return cls(params=params, scale=scale, h0=h0, pred0=pred0)
 
 
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """Frozen construction options of a :class:`FleetRuntime`.
+
+    The one validated bundle behind BOTH construction surfaces: the classic
+    keyword pile (``FleetRuntime(spec, policy=..., obs=...)`` — still
+    supported; it builds a config internally) and the explicit
+    :meth:`FleetRuntime.from_config`. The multi-tenant gateway embeds the
+    same object in its ``TenantSpec``, so standalone and pooled runtimes
+    share one validation path and one source of construction truth.
+
+    Fields mirror the runtime keywords exactly; see
+    :class:`FleetRuntime` for their semantics. ``hours_per_month`` is
+    overridden by the spec's calendar when a spec (not pre-stacked arrays)
+    is given, same as the keyword always was.
+    """
+
+    routing: object = None
+    policy: object = None
+    hours_per_month: int = 730
+    renew_in_chunks: bool = False
+    forecaster: Optional[StreamingForecaster] = None
+    obs: object = None
+
+    def validate(self) -> "RuntimeConfig":
+        if not (int(self.hours_per_month) >= 1):
+            raise ValueError(
+                f"hours_per_month must be >= 1, got {self.hours_per_month}"
+            )
+        if self.forecaster is not None:
+            if not isinstance(self.forecaster, StreamingForecaster):
+                raise TypeError(
+                    "forecaster must be a StreamingForecaster, got "
+                    f"{type(self.forecaster).__name__}"
+                )
+            if self.policy is not None and not isinstance(
+                self.policy, ForecastGatedPolicy
+            ):
+                raise ValueError(
+                    "forecaster= only applies to a ForecastGatedPolicy"
+                )
+        if self.obs not in (None, True, False) and not hasattr(
+            self.obs, "cadence"
+        ):
+            raise TypeError(
+                "obs must be None, a bool, or an ObsConfig-like object "
+                f"with a drain cadence — got {type(self.obs).__name__}"
+            )
+        return self
+
+
 def _build_step(
     topology: bool, pred_source: Optional[str], endo: bool,
     obs: bool = False, drain: bool = False,
@@ -274,6 +325,98 @@ def _build_step(
     return step
 
 
+@dataclasses.dataclass(frozen=True)
+class ResolvedRuntime:
+    """The operands one streaming runtime steps with, fully resolved.
+
+    Produced by :func:`resolve_runtime_operands` — the SINGLE spec/policy
+    resolution path shared by :class:`FleetRuntime` and the multi-tenant
+    gateway (:mod:`repro.gateway`), so a pooled tenant and a standalone
+    runtime built from the same ``(spec, RuntimeConfig)`` are guaranteed to
+    price and gate on identical arrays (the lifted bit-exactness contract).
+    """
+
+    spec: object                  # the TopologySpec when one was given (for
+                                  # reroute validation), else None
+    topology: bool
+    arrays: object                # stacked FleetArrays / TopologyArrays
+    policy: object                # resolved policy pytree, per-row leaves
+    pred_source: Optional[str]    # None | "replay" | "live"
+    fc: Optional[dict]            # live-forecaster device params, or None
+    hours_per_month: int
+
+
+def resolve_runtime_operands(spec, config: RuntimeConfig) -> ResolvedRuntime:
+    """Resolve ``(spec, config)`` into stepping operands (see
+    :class:`ResolvedRuntime`). Pure construction — no carried state is
+    allocated here."""
+    config = config.validate()
+    with enable_x64():
+        kind = "reactive"
+        hours_per_month = int(config.hours_per_month)
+        resolved_spec = None
+        routing = config.routing
+        if isinstance(spec, FleetSpec):
+            hours_per_month = spec.hours_per_month
+            kind = spec.policy
+            arrays: Union[FleetArrays, TopologyArrays] = spec.stack(jnp.float64)
+        elif isinstance(spec, TopologySpec):
+            hours_per_month = spec.hours_per_month
+            kind = spec.policy
+            assert routing is not None, (
+                "a TopologySpec needs an explicit routing (the runtime "
+                "cannot co-optimize it online; run optimize_routing first)"
+            )
+            resolved_spec = spec
+            arrays = spec.stack(routing, jnp.float64)
+        else:
+            assert routing is None, "pre-stacked arrays already carry a routing"
+            arrays = spec
+        topology = isinstance(arrays, TopologyArrays)
+        policy = config.policy
+        if policy is None:
+            policy = make_policy(
+                kind, arrays.toggle, renew_in_chunks=config.renew_in_chunks
+            )
+
+        pred_source = None
+        fc = None
+        if isinstance(policy, ForecastGatedPolicy):
+            assert policy.cost_coef is not None, (
+                "streaming a ForecastGatedPolicy needs explicit demand->"
+                "cost coefficients: build it with forecast_fleet_policy/"
+                "forecast_topology_policy (or pass cost_coef= to "
+                "forecast_gated_policy)"
+            )
+            if config.forecaster is not None:
+                pred_source = "live"
+                fc = {
+                    "params": jax.tree.map(
+                        jnp.asarray, config.forecaster.params
+                    ),
+                    "scale": jnp.asarray(config.forecaster.scale, jnp.float64),
+                }
+            else:
+                pred_source = "replay"
+                assert policy.pred_demand.ndim == 2, (
+                    "replay mode indexes pred_demand columns per tick — "
+                    "expected a (rows, T) prediction matrix"
+                )
+        else:
+            assert config.forecaster is None, (
+                "forecaster= only applies to a ForecastGatedPolicy"
+            )
+    return ResolvedRuntime(
+        spec=resolved_spec,
+        topology=topology,
+        arrays=arrays,
+        policy=policy,
+        pred_source=pred_source,
+        fc=fc,
+        hours_per_month=int(hours_per_month),
+    )
+
+
 class FleetRuntime:
     """Incremental fleet planner: ``step(demand_t) -> modes``, one jit call.
 
@@ -321,68 +464,36 @@ class FleetRuntime:
         forecaster: Optional[StreamingForecaster] = None,
         obs=None,
     ):
+        # The kwarg surface and from_config() share one validation path:
+        # everything funnels through a RuntimeConfig (kwargs keep working —
+        # they ARE the config fields).
+        self.config = RuntimeConfig(
+            routing=routing,
+            policy=policy,
+            hours_per_month=hours_per_month,
+            renew_in_chunks=renew_in_chunks,
+            forecaster=forecaster,
+            obs=obs,
+        ).validate()
+        ops = resolve_runtime_operands(spec, self.config)
         with enable_x64():
-            kind = "reactive"
-            self._spec = None
-            if isinstance(spec, FleetSpec):
-                hours_per_month = spec.hours_per_month
-                kind = spec.policy
-                arrays: Union[FleetArrays, TopologyArrays] = spec.stack(jnp.float64)
-            elif isinstance(spec, TopologySpec):
-                hours_per_month = spec.hours_per_month
-                kind = spec.policy
-                assert routing is not None, (
-                    "a TopologySpec needs an explicit routing (the runtime "
-                    "cannot co-optimize it online; run optimize_routing first)"
-                )
-                self._spec = spec
-                arrays = spec.stack(routing, jnp.float64)
-            else:
-                assert routing is None, "pre-stacked arrays already carry a routing"
-                arrays = spec
-            self.topology = isinstance(arrays, TopologyArrays)
-            self.arrays = arrays
+            self._spec = ops.spec
+            self.topology = ops.topology
+            self.arrays = ops.arrays
             self._set_routing_caches()
-            if policy is None:
-                policy = make_policy(
-                    kind, arrays.toggle, renew_in_chunks=renew_in_chunks
-                )
-            self.policy = policy
+            self.policy = ops.policy
+            self.pred_source = ops.pred_source
+            self._fc = ops.fc
+            if ops.pred_source == "live":
+                self._forecaster = forecaster
 
-            self.pred_source = None
-            self._fc = None
-            if isinstance(policy, ForecastGatedPolicy):
-                assert policy.cost_coef is not None, (
-                    "streaming a ForecastGatedPolicy needs explicit demand->"
-                    "cost coefficients: build it with forecast_fleet_policy/"
-                    "forecast_topology_policy (or pass cost_coef= to "
-                    "forecast_gated_policy)"
-                )
-                if forecaster is not None:
-                    self.pred_source = "live"
-                    self._fc = {
-                        "params": jax.tree.map(jnp.asarray, forecaster.params),
-                        "scale": jnp.asarray(forecaster.scale, jnp.float64),
-                    }
-                    self._forecaster = forecaster
-                else:
-                    self.pred_source = "replay"
-                    assert policy.pred_demand.ndim == 2, (
-                        "replay mode indexes pred_demand columns per tick — "
-                        "expected a (rows, T) prediction matrix"
-                    )
-            else:
-                assert forecaster is None, (
-                    "forecaster= only applies to a ForecastGatedPolicy"
-                )
-
-            self.hours_per_month = int(hours_per_month)
-            self.hbuf = int(np.max(np.asarray(arrays.toggle.h))) + 1
-            self.n_rows = arrays.toggle.theta1.shape[0]
+            self.hours_per_month = ops.hours_per_month
+            self.hbuf = int(np.max(np.asarray(self.arrays.toggle.h))) + 1
+            self.n_rows = self.arrays.toggle.theta1.shape[0]
             self.n_demand_rows = (
-                arrays.n_pairs if self.topology else self.n_rows
+                self.arrays.n_pairs if self.topology else self.n_rows
             )
-            self._h_np = np.asarray(arrays.toggle.h, np.int64)
+            self._h_np = np.asarray(self.arrays.toggle.h, np.int64)
             self._rows_idx = np.arange(self.n_rows)
 
             if obs is not None and obs is not False:
@@ -396,6 +507,23 @@ class FleetRuntime:
                 self.obs = None
                 self._obs_edges = None
             self.reset()
+
+    @classmethod
+    def from_config(cls, spec, config: RuntimeConfig) -> "FleetRuntime":
+        """Build a runtime from a :class:`RuntimeConfig` — the explicit twin
+        of the keyword constructor (same fields, same validation). This is
+        the construction path the multi-tenant gateway uses: its
+        ``TenantSpec`` embeds the same config object."""
+        config = config.validate()
+        return cls(
+            spec,
+            routing=config.routing,
+            policy=config.policy,
+            hours_per_month=config.hours_per_month,
+            renew_in_chunks=config.renew_in_chunks,
+            forecaster=config.forecaster,
+            obs=config.obs,
+        )
 
     def _set_routing_caches(self) -> None:
         """Host/device twins of ``arrays.routing`` (the single source): the
@@ -657,7 +785,7 @@ class FleetRuntime:
             self._routing_idx_np, minlength=self.n_rows
         ).astype(np.float64)
 
-    def modes(self, out) -> list:
+    def modes(self, out, *, mode_fn=None) -> list:
         """Map one step's FSM states to per-ACTUATOR collective modes.
 
         Fleet mode: one mode per link (decision row == actuator). Topology
@@ -666,11 +794,18 @@ class FleetRuntime:
         (:func:`repro.dist.collectives.fleet_sync_grads`) syncs per training
         job (pair), not per decision row; pairs sharing an ON port share one
         leased sync domain.
+
+        ``mode_fn`` maps an FSM state code to a mode string; ``None`` falls
+        back to the module-level :func:`repro.core.planner.collective_mode`
+        (the deprecated global default —
+        :class:`ElasticFleetPlanner` passes its per-instance one).
         """
+        if mode_fn is None:
+            mode_fn = collective_mode
         states = np.asarray(out["state"])
         if self.topology:
             states = states[self._routing_idx_np]
-        return [collective_mode(int(s)) for s in states]
+        return [mode_fn(int(s)) for s in states]
 
 
 # ---------------------------------------------------------------------------
@@ -729,12 +864,31 @@ class ElasticFleetPlanner:
     on the next tick.
     """
 
+    # Deprecated default: prefer the per-instance ``compress_ratio=``
+    # constructor parameter; this class attribute (aliasing the module-level
+    # global in repro.core.planner) remains only as its fallback value.
     COMPRESS_RATIO = COMPRESS_RATIO
 
-    def __init__(self, fleet, *, compress_ratio: Optional[float] = None, **runtime_kw):
+    def __init__(
+        self,
+        fleet,
+        *,
+        compress_ratio: Optional[float] = None,
+        collective_mode=None,
+        **runtime_kw,
+    ):
+        """``compress_ratio``/``collective_mode`` are per-instance knobs
+        (different planners can price different compression hardware or map
+        FSM states to custom collective paths). ``None`` falls back to the
+        module-level globals in :mod:`repro.core.planner`, which are
+        retained as deprecated defaults only."""
         self.runtime = FleetRuntime(fleet, **runtime_kw)
         self.topology = self.runtime.topology
-        self.compress_ratio = float(compress_ratio or COMPRESS_RATIO)
+        self.compress_ratio = float(compress_ratio or self.COMPRESS_RATIO)
+        self.collective_mode = (
+            collective_mode if collective_mode is not None
+            else globals()["collective_mode"]
+        )
         n, p = self.runtime.n_rows, self.runtime.n_demand_rows
         self.cost = np.zeros(n)
         self.cost_vpn_only = np.zeros(n)
@@ -767,7 +921,7 @@ class ElasticFleetPlanner:
         self.cost += np.where(on, cci_c, vpn_c)
         self.cost_vpn_only += vpn_c
         self.cost_cci_only += cci_c
-        modes = self.runtime.modes(out)
+        modes = self.runtime.modes(out, mode_fn=self.collective_mode)
         if self.runtime.obs is not None:
             # Sync-domain fusion change events: a domain is a (port, mode)
             # bucket of actuators; trace only when the partition changes.

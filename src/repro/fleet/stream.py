@@ -1,0 +1,30 @@
+"""``repro.fleet.stream`` — the STREAMING/online surface (v1 facade).
+
+The incremental runtime (:class:`FleetRuntime` + its frozen
+:class:`RuntimeConfig`), the live SSM forecaster, and the endogenous-demand
+elastic planner that actuates per-link collectives. The offline planning
+surface lives in :mod:`repro.fleet.plan`; observability in
+:mod:`repro.fleet.observe`; the multi-tenant pooled front-end over this
+runtime is :mod:`repro.gateway`.
+"""
+from .runtime import (  # noqa: F401
+    ElasticFleetPlanner,
+    FleetPlannerReport,
+    FleetRuntime,
+    ResolvedRuntime,
+    RuntimeConfig,
+    StreamingForecaster,
+    resolve_runtime_operands,
+    streaming_forecast_policy,
+)
+
+__all__ = [
+    "ElasticFleetPlanner",
+    "FleetPlannerReport",
+    "FleetRuntime",
+    "ResolvedRuntime",
+    "RuntimeConfig",
+    "StreamingForecaster",
+    "resolve_runtime_operands",
+    "streaming_forecast_policy",
+]

@@ -1,0 +1,66 @@
+"""Multi-tenant fleet gateway: pooled runtimes behind one jitted mega-tick.
+
+Thousands of independent tenants — each a full streaming planning problem
+(its own :class:`~repro.fleet.topology.TopologySpec`/routing or fleet
+spec, policy pytree, billing calendar, horizon, demand stream) — served
+from capacity-bucketed, free-list-allocated padded state pools. One
+``jax.vmap``-ed, alive-masked dispatch of the standalone tick advances
+every tenant of a bucket one hour; membership churn is operand traffic,
+so each bucket shape compiles exactly once. Decisions are bit-exact vs
+each tenant's standalone :class:`~repro.fleet.runtime.FleetRuntime`.
+
+Quick start::
+
+    import numpy as np
+    from repro.fleet.stream import RuntimeConfig
+    from repro.fleet.plan import build_topology_scenario, optimize_routing
+    from repro.gateway import FleetGateway, GatewayConfig, TenantSpec, TenantSLO
+
+    gw = FleetGateway(GatewayConfig(slots_per_bucket=8, cadence=32))
+
+    sc = build_topology_scenario(6, horizon=720, seed=0)
+    routing = optimize_routing(sc.topo, sc.demand)
+    gw.join("acme", TenantSpec(
+        spec=sc.topo, demand=sc.demand,
+        config=RuntimeConfig(routing=routing),     # the FleetRuntime config
+        slo=TenantSLO(max_hourly_cost=50.0),       # checked per drained window
+    ))
+
+    for hour in range(720):
+        outs = gw.tick()                 # one dispatch per non-empty bucket
+        # outs["acme"] is the standalone FleetRuntime.step() dict
+        if hour == 240:
+            gw.reroute("acme", new_routing)        # operand write, no recompile
+
+    print(gw.billing("acme"))            # host-side float64 lifetime totals
+    print(gw.check())                    # typed per-tenant ContractViolations
+
+Admission is bounded: when no bucket has headroom, joins queue FIFO up to
+``queue_limit`` and then *reject* with a typed :class:`AdmissionError`
+(``reason="queue_full"`` / ``"too_large"``) — the backpressure contract
+bursty arrival needs. ``gw.compiles`` counts jitted mega-tick variants:
+steady-state churn holds it constant (asserted in the tests and gated in
+``benchmarks/bench_gateway.py``).
+"""
+from .gateway import (
+    AdmissionError,
+    FleetGateway,
+    GatewayConfig,
+    TenantHandle,
+    TenantSLO,
+    TenantSpec,
+)
+from .pool import BucketKey, bucket_key_for, ceil_pow2, pack_tenant
+
+__all__ = [
+    "AdmissionError",
+    "BucketKey",
+    "FleetGateway",
+    "GatewayConfig",
+    "TenantHandle",
+    "TenantSLO",
+    "TenantSpec",
+    "bucket_key_for",
+    "ceil_pow2",
+    "pack_tenant",
+]

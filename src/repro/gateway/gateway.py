@@ -1,0 +1,703 @@
+"""The multi-tenant fleet gateway: N runtimes behind one jitted mega-tick.
+
+One :class:`FleetGateway` serves many independent tenants — each with its
+own :class:`~repro.fleet.topology.TopologySpec`/routing (or fleet spec),
+policy pytree, billing calendar, horizon, and demand stream — from shared
+capacity-bucketed state pools. Per gateway hour, each non-empty bucket
+costs exactly ONE jitted dispatch: the standalone tick of
+:func:`repro.fleet.runtime._build_step`, ``jax.vmap``-ed over the pool's
+leading slot axis and masked by an alive bitmap. Membership churn (join,
+leave, grow/shrink across buckets, re-route) is pure operand traffic —
+``.at[slot].set`` writes into fixed-shape pools — so a bucket shape
+compiles once, ever.
+
+The contract is the streamed-vs-offline exactness guarantee lifted one
+level: a pooled tenant's per-hour decisions are BIT-EXACT vs its own
+standalone :class:`~repro.fleet.runtime.FleetRuntime` fed the same demand
+(property-tested across all three policies, including mid-stream
+``reroute()`` and departures). That holds because (a) tenant operands
+resolve through the same :func:`~repro.fleet.runtime.resolve_runtime_operands`
+path, (b) padding is provably inert (:mod:`repro.gateway.pool`), and
+(c) the sequential host reductions (prefix rings, month boundaries, tier
+state) are the standalone ones, vectorized over slots in the same float64.
+
+Billing stays host-side per tenant (float64 accumulators, surviving
+bucket moves via a carry), metrics ride the PR-6 device ring with a tenant
+axis (one metrics path; per-tenant windows drained on the gateway cadence
+and reconciled + SLO-checked by
+:class:`~repro.obs.monitors.TenantSLOMonitor`, breaches surfaced as typed
+:class:`~repro.obs.ContractViolation`\\ s), and admission control bounds
+bursty arrival: a FIFO join queue with a hard limit, and typed
+:class:`AdmissionError` rejections that never touch the device.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from repro.core.planner import collective_mode
+from repro.fleet.runtime import (
+    RuntimeConfig,
+    _build_step,
+    resolve_runtime_operands,
+)
+from repro.obs.metrics import (
+    DrainedMetrics,
+    default_hist_edges,
+    init_tenant_ring,
+    reset_ring_slot,
+)
+from repro.obs.monitors import ContractViolation, TenantSLOMonitor
+
+from .pool import BucketKey, bucket_key_for, pack_tenant, set_slot
+
+
+class AdmissionError(RuntimeError):
+    """A typed join rejection — the gateway's backpressure signal.
+
+    ``reason`` is machine-readable: ``"queue_full"`` (burst exceeded the
+    bounded join queue) or ``"too_large"`` (the tenant's padded capacities
+    exceed the gateway's pool ceiling). Rejections are decided entirely
+    host-side — no pool is allocated, nothing compiles.
+    """
+
+    def __init__(self, reason: str, message: str):
+        super().__init__(message)
+        self.reason = reason
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSLO:
+    """What the tenant was sold: a realized-cost budget checked per drained
+    window (``None`` disables the check; billing reconciliation always runs)."""
+
+    max_hourly_cost: Optional[float] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant's admission request: spec + config + demand + contract.
+
+    ``config`` is the SAME frozen :class:`~repro.fleet.runtime.RuntimeConfig`
+    that drives ``FleetRuntime.from_config`` — one validation path for
+    standalone and pooled construction. ``demand`` is the tenant's
+    (rows, T) GB/hour stream; ``horizon`` defaults to its full length.
+    """
+
+    spec: object
+    demand: np.ndarray
+    config: RuntimeConfig = RuntimeConfig()
+    horizon: Optional[int] = None
+    slo: Optional[TenantSLO] = None
+
+    def resolved_horizon(self) -> int:
+        h = self.horizon
+        if h is None:
+            h = int(np.asarray(self.demand).shape[1])
+        assert h >= 1, h
+        return int(h)
+
+
+@dataclasses.dataclass
+class TenantHandle:
+    """The gateway's view of one tenant: where it lives and how far it is."""
+
+    name: str
+    status: str                     # "queued" | "active" | "done" | "left"
+    key: Optional[BucketKey] = None
+    bucket: Optional[int] = None    # index within the key's bucket list
+    slot: Optional[int] = None
+    joined_at: int = 0              # gateway hour of activation
+
+    @property
+    def placed(self) -> bool:
+        return self.status == "active"
+
+
+@dataclasses.dataclass(frozen=True)
+class GatewayConfig:
+    """Gateway-level knobs (tenant-level ones live in the TenantSpec)."""
+
+    slots_per_bucket: int = 8
+    max_buckets: Optional[int] = None   # pool-count ceiling (None: unbounded)
+    queue_limit: int = 16               # bounded join queue (backpressure)
+    max_rows: int = 4096                # per-tenant padded-capacity ceiling
+    obs: bool = True                    # tenant-axis metrics ring + monitors
+    cadence: int = 64                   # gateway drain cadence (hours)
+    hist_bins: int = 8
+
+    def __post_init__(self):
+        assert self.slots_per_bucket >= 1
+        assert self.queue_limit >= 0
+        assert self.cadence >= 1 and self.hist_bins >= 2
+
+
+class _Bucket:
+    """One capacity bucket: fixed-shape device pools + vectorized host state.
+
+    Device pools carry one leading slot axis over the standalone tick's
+    operands (padded arrays/policy stacks, FSM carries, tick counters,
+    routing index rows, the tenant-axis metrics ring, the alive bitmap).
+    Host state is the standalone :class:`~repro.fleet.runtime.RuntimeState`
+    numpy block, one row per slot — float64, elementwise identical math.
+    """
+
+    def __init__(self, key: BucketKey, n_slots: int, packed, obs_dims):
+        self.key = key
+        self.n_slots = n_slots
+        m, p, hb = key.rows_cap, key.pairs_cap, key.hbuf_cap
+        tile = lambda x: jnp.tile(
+            x, (n_slots,) + (1,) * getattr(x, "ndim", 0)
+        )
+        with enable_x64():
+            # Seed every slot from the first joiner's padded operands —
+            # placeholder values for not-yet-allocated slots (their outputs
+            # are alive-masked and their FSMs start OFF on zero demand).
+            self.arrays = jax.tree.map(tile, packed.arrays)
+            self.policy = jax.tree.map(tile, packed.policy)
+            fsm_one = jax.vmap(lambda q: q.init_carry())(packed.policy)
+            self.fsm = jax.tree.map(tile, fsm_one)
+            self.t_dev = jnp.zeros((n_slots,), jnp.int32)
+            self.ssm_h = jnp.zeros((n_slots, m, 0), jnp.float32)
+            self.routing_idx = (
+                tile(jnp.asarray(packed.routing_idx, jnp.int32))
+                if key.topology else None
+            )
+            self.alive_dev = jnp.zeros((n_slots,), jnp.float64)
+            self.ring = None
+            if obs_dims is not None:
+                cadence, n_bins = obs_dims
+                self.ring = init_tenant_ring(
+                    n_slots, m, cadence, n_bins, key.n_tiers
+                )
+        z = lambda *s: np.zeros((n_slots,) + s, np.float64)
+        self.alive = np.zeros(n_slots, bool)
+        self.t = np.zeros(n_slots, np.int64)
+        self.hpm = np.ones(n_slots, np.int64)
+        self.horizon = np.zeros(n_slots, np.int64)
+        self.m = np.zeros(n_slots, np.int64)      # real decision rows
+        self.p = np.zeros(n_slots, np.int64)      # real demand rows
+        self.h_np = np.ones((n_slots, m), np.int64)
+        self.dcum, self.dcum_month = z(p), z(p)
+        self.vpn_pref, self.cci_pref = z(m), z(m)
+        self.ring_vpn, self.ring_cci = z(m, hb), z(m, hb)
+        self.bill_real, self.bill_vpn, self.bill_cci = z(m), z(m), z(m)
+        self.gb = z(p)
+        self.demand = np.zeros((n_slots, p, 1), np.float64)
+        self.routing_idx_np = np.zeros((n_slots, p), np.int64)
+        self.slots: List[Optional[str]] = [None] * n_slots
+        self.free: List[int] = list(range(n_slots))[::-1]
+
+    @property
+    def occupied(self) -> int:
+        return self.n_slots - len(self.free)
+
+    def ensure_T(self, T: int) -> None:
+        cur = self.demand.shape[2]
+        if T > cur:
+            self.demand = np.pad(self.demand, ((0, 0), (0, 0), (0, T - cur)))
+
+    def write_slot(self, s: int, name: str, packed, demand, horizon) -> None:
+        """Allocate slot ``s``: pure per-slot operand writes, fixed shapes."""
+        with enable_x64():
+            self.arrays = set_slot(self.arrays, s, packed.arrays)
+            self.policy = set_slot(self.policy, s, packed.policy)
+            fsm_one = jax.vmap(lambda q: q.init_carry())(packed.policy)
+            self.fsm = set_slot(self.fsm, s, fsm_one)
+            self.t_dev = self.t_dev.at[s].set(0)
+            if self.routing_idx is not None:
+                self.routing_idx = self.routing_idx.at[s].set(
+                    jnp.asarray(packed.routing_idx, jnp.int32)
+                )
+            self.alive_dev = self.alive_dev.at[s].set(1.0)
+            if self.ring is not None:
+                self.ring = reset_ring_slot(self.ring, s)
+        self.alive[s] = True
+        self.t[s] = 0
+        self.hpm[s] = packed.hours_per_month
+        self.horizon[s] = horizon
+        self.m[s], self.p[s] = packed.n_rows, packed.n_pairs
+        self.h_np[s] = packed.h_np
+        for a in (self.dcum, self.dcum_month, self.vpn_pref, self.cci_pref,
+                  self.ring_vpn, self.ring_cci, self.bill_real,
+                  self.bill_vpn, self.bill_cci, self.gb):
+            a[s] = 0.0
+        d = np.asarray(demand, np.float64)
+        self.ensure_T(d.shape[1])
+        self.demand[s] = 0.0
+        self.demand[s, : d.shape[0], : d.shape[1]] = d
+        if packed.routing_idx is not None:
+            self.routing_idx_np[s] = packed.routing_idx
+        self.slots[s] = name
+
+    def clear_slot(self, s: int) -> None:
+        with enable_x64():
+            self.alive_dev = self.alive_dev.at[s].set(0.0)
+        self.alive[s] = False
+        self.demand[s] = 0.0
+        self.slots[s] = None
+        self.free.append(s)
+
+
+class FleetGateway:
+    """Admit, pool, and step many tenant runtimes — one dispatch per bucket.
+
+    See the module docstring for the architecture;
+    :mod:`repro.gateway`'s package docstring has a quickstart.
+    """
+
+    def __init__(self, config: GatewayConfig = GatewayConfig()):
+        self.config = config
+        self.cadence = int(config.cadence)
+        self.hist_bins = int(config.hist_bins)
+        self._obs = bool(config.obs)
+        with enable_x64():
+            self._edges = (
+                jnp.asarray(default_hist_edges(self.hist_bins), jnp.float64)
+                if self._obs else None
+            )
+        self._buckets: Dict[BucketKey, List[_Bucket]] = {}
+        self._tenants: Dict[str, TenantHandle] = {}
+        self._specs: Dict[str, TenantSpec] = {}
+        self._resolved: Dict[str, object] = {}
+        self._monitors: Dict[str, TenantSLOMonitor] = {}
+        self._billing_carry: Dict[str, Dict[str, np.ndarray]] = {}
+        self._drained: Dict[str, List[DrainedMetrics]] = {}
+        self._queue: collections.deque = collections.deque()
+        self._compiled: dict = {}
+        self.compiles = 0               # jitted mega-tick variants built
+        self.violations: List[ContractViolation] = []
+        self.hours = 0                  # the gateway clock
+
+    # --- admission ---------------------------------------------------------
+
+    def join(self, name: str, tenant: TenantSpec) -> TenantHandle:
+        """Admit a tenant: place it in a pool slot now, or queue it (FIFO,
+        bounded), or reject with a typed :class:`AdmissionError`."""
+        assert name not in self._tenants or self._tenants[name].status in (
+            "done", "left"
+        ), f"tenant {name!r} already admitted"
+        resolved = resolve_runtime_operands(tenant.spec, tenant.config)
+        key = bucket_key_for(resolved)
+        if max(key.rows_cap, key.pairs_cap) > self.config.max_rows:
+            raise AdmissionError(
+                "too_large",
+                f"tenant {name!r} pads to {key.rows_cap} rows x "
+                f"{key.pairs_cap} pairs, over the gateway ceiling "
+                f"{self.config.max_rows}",
+            )
+        packed = pack_tenant(resolved, key)
+        handle = TenantHandle(name=name, status="queued", key=key)
+        self._tenants[name] = handle
+        self._specs[name] = tenant
+        self._resolved[name] = resolved
+        self._billing_carry.setdefault(name, self._zero_totals())
+        if not self._try_place(handle, packed, tenant):
+            if len(self._queue) >= self.config.queue_limit:
+                del self._tenants[name], self._specs[name], self._resolved[name]
+                raise AdmissionError(
+                    "queue_full",
+                    f"no bucket has headroom for tenant {name!r} and the "
+                    f"join queue is at its limit "
+                    f"({self.config.queue_limit})",
+                )
+            self._queue.append((name, packed, tenant))
+        return handle
+
+    def _zero_totals(self) -> Dict[str, float]:
+        return {"realized": 0.0, "vpn": 0.0, "cci": 0.0, "gb": 0.0}
+
+    def _try_place(self, handle, packed, tenant: TenantSpec) -> bool:
+        key = packed.key
+        buckets = self._buckets.setdefault(key, [])
+        for bi, b in enumerate(buckets):
+            if b.free:
+                self._activate(handle, packed, tenant, bi, b)
+                return True
+        if not self._may_create_bucket():
+            return False
+        b = _Bucket(
+            key, self.config.slots_per_bucket, packed,
+            (self.cadence, self.hist_bins) if self._obs else None,
+        )
+        buckets.append(b)
+        self._activate(handle, packed, tenant, len(buckets) - 1, b)
+        return True
+
+    def _may_create_bucket(self) -> bool:
+        if self.config.max_buckets is None:
+            return True
+        total = sum(len(v) for v in self._buckets.values())
+        if total < self.config.max_buckets:
+            return True
+        # GC one fully-empty pool to make room (its compiled tick stays
+        # cached — re-creating the same key later costs zero recompiles).
+        for key, lst in self._buckets.items():
+            for i, b in enumerate(lst):
+                if b.occupied == 0:
+                    del lst[i]
+                    return True
+        return False
+
+    def _activate(self, handle, packed, tenant: TenantSpec, bi, bucket) -> None:
+        s = bucket.free.pop()
+        bucket.write_slot(
+            s, handle.name, packed, tenant.demand, tenant.resolved_horizon()
+        )
+        handle.status, handle.bucket, handle.slot = "active", bi, s
+        handle.joined_at = self.hours
+        slo = tenant.slo or TenantSLO()
+        self._monitors[handle.name] = TenantSLOMonitor(
+            handle.name, max_hourly_cost=slo.max_hourly_cost
+        )
+        self._drained.setdefault(handle.name, [])
+
+    def _drain_admission_queue(self) -> None:
+        still = collections.deque()
+        while self._queue:
+            name, packed, tenant = self._queue.popleft()
+            if not self._try_place(self._tenants[name], packed, tenant):
+                still.append((name, packed, tenant))
+        self._queue = still
+
+    # --- the mega-tick -----------------------------------------------------
+
+    def _mega_fn(self, key: BucketKey, n_slots: int, drain: bool):
+        ck = key.compile_key(n_slots=n_slots, obs=self._obs, drain=drain)
+        fn = self._compiled.get(ck)
+        if fn is None:
+            step = _build_step(
+                key.topology, key.pred_source, False, self._obs, drain
+            )
+            edges = self._edges
+
+            def mega(arrays, policy, fsm, ssm_h, t, routing_idx, ring,
+                     alive, packed):
+                def one(a, q, f, s, tt, ri, rg, pk):
+                    return step(a, q, None, f, s, tt, ri, rg, edges, pk)
+
+                fsm, ssm_h, t1, ring, out = jax.vmap(one)(
+                    arrays, policy, fsm, ssm_h, t, routing_idx, ring, packed
+                )
+                # Alive-bitmap mask: dead slots emit exact zeros; x1.0 is
+                # bitwise identity for live slots.
+                return fsm, ssm_h, t1, ring, out * alive[:, None]
+
+            fn = jax.jit(
+                mega, donate_argnums=(6,) if self._obs else ()
+            )
+            self._compiled[ck] = fn
+            self.compiles += 1
+        return fn
+
+    def tick(self, *, collect: bool = True) -> Dict[str, Dict[str, np.ndarray]]:
+        """Advance EVERY active tenant one hour — one jitted dispatch per
+        non-empty bucket. Returns per-tenant step outputs (the standalone
+        ``FleetRuntime.step`` dict, sliced to real rows) when ``collect``;
+        pass ``collect=False`` on the hot path to skip building them."""
+        hour = self.hours
+        drain = self._obs and (hour + 1) % self.cadence == 0
+        outs: Dict[str, Dict[str, np.ndarray]] = {}
+        finished: List[str] = []
+        for key, buckets in self._buckets.items():
+            for b in buckets:
+                if b.occupied == 0:
+                    continue
+                self._tick_bucket(key, b, drain, collect, outs, finished)
+        self.hours = hour + 1
+        for name in finished:
+            self._finish(name, "done")
+        self._drain_admission_queue()
+        return outs
+
+    def _tick_bucket(self, key, b, drain, collect, outs, finished) -> None:
+        M, P = key.rows_cap, key.pairs_cap
+        # Vectorized standalone host math (numpy float64, one row per slot —
+        # elementwise identical to FleetRuntime.step's sequential block).
+        boundary = b.alive & (b.t % b.hpm == 0)
+        np.copyto(b.dcum_month, b.dcum, where=boundary[:, None])
+        month_cum = b.dcum - b.dcum_month
+        lo = np.maximum(0, b.t[:, None] - b.h_np)
+        idx = (lo % key.hbuf_cap)[..., None]
+        r_vpn = b.vpn_pref - np.take_along_axis(b.ring_vpn, idx, axis=2)[..., 0]
+        r_cci = b.cci_pref - np.take_along_axis(b.ring_cci, idx, axis=2)[..., 0]
+        col = np.minimum(b.t, b.demand.shape[2] - 1)
+        d_t = np.take_along_axis(
+            b.demand, col[:, None, None], axis=2
+        )[:, :, 0] * b.alive[:, None]
+        packed_in = np.concatenate([d_t, month_cum, r_vpn, r_cci], axis=1)
+
+        fn = self._mega_fn(key, b.n_slots, drain)
+        with enable_x64():
+            b.fsm, b.ssm_h, b.t_dev, b.ring, po = fn(
+                b.arrays, b.policy, b.fsm, b.ssm_h, b.t_dev,
+                b.routing_idx, b.ring, b.alive_dev,
+                jax.device_put(packed_in),
+            )
+        po = np.asarray(po)
+        x = po[:, 0:M]
+        state = po[:, M:2 * M]
+        vpn_t = po[:, 2 * M:3 * M]
+        cci_t = po[:, 3 * M:4 * M]
+        d_pair = po[:, 4 * M:4 * M + P]
+        base = 4 * M + P
+
+        # Commit: ring slots take pref[t] BEFORE the prefixes absorb this
+        # hour (the exclusive-prefix convention), then billing accumulates
+        # (dead slots are alive-masked upstream, so they add exact zeros).
+        slot_col = (b.t % key.hbuf_cap)[:, None, None]
+        np.put_along_axis(b.ring_vpn, slot_col, b.vpn_pref[..., None], axis=2)
+        np.put_along_axis(b.ring_cci, slot_col, b.cci_pref[..., None], axis=2)
+        b.vpn_pref += vpn_t
+        b.cci_pref += cci_t
+        b.dcum += d_pair
+        cost = np.where(x == 1.0, cci_t, vpn_t)
+        b.bill_real += cost
+        b.bill_vpn += vpn_t
+        b.bill_cci += cci_t
+        b.gb += d_pair
+
+        vecs = po[:, base:] if drain else None
+        for s, name in enumerate(b.slots):
+            if name is None:
+                continue
+            m, p = int(b.m[s]), int(b.p[s])
+            if collect:
+                xs = x[s, :m].astype(np.int64)
+                outs[name] = {
+                    "x": xs,
+                    "state": state[s, :m].astype(np.int64),
+                    "r_vpn": r_vpn[s, :m],
+                    "r_cci": r_cci[s, :m],
+                    "vpn_cost": vpn_t[s, :m],
+                    "cci_cost": cci_t[s, :m],
+                    "cost": np.where(xs == 1, cci_t[s, :m], vpn_t[s, :m]),
+                }
+            if drain:
+                self._drain_slot(name, b, s, vecs[s].copy(), int(b.t[s]) + 1)
+            if b.t[s] + 1 >= b.horizon[s]:
+                finished.append(name)
+        b.t += 1
+
+    # --- metrics / SLO -----------------------------------------------------
+
+    def _drain_slot(self, name, b, s, vec, hour) -> None:
+        ticks = vec[0]
+        if ticks <= 0:
+            return
+        # Pad correction: the realized-cost histogram's zero-bin counted
+        # every padded row (cost exactly 0.0) on every tick.
+        vec[5 + 8 * self.cadence] -= ticks * (b.key.rows_cap - int(b.m[s]))
+        dm = DrainedMetrics.from_flat(
+            hour, vec, cap=self.cadence,
+            n_bins=self.hist_bins, n_tiers=b.key.n_tiers,
+        )
+        self._drained[name].append(dm)
+        host_totals = {
+            "realized": b.bill_real[s].sum(),
+            "vpn": b.bill_vpn[s].sum(),
+            "cci": b.bill_cci[s].sum(),
+            "gb": b.gb[s].sum(),
+        }
+        self.violations.extend(
+            self._monitors[name].on_drain(hour, dm, host_totals=host_totals)
+        )
+
+    def _flush_slot(self, name, b, s) -> None:
+        """Host-side partial-window drain (leave/check time — never on the
+        per-tick hot path)."""
+        if b.ring is None:
+            return
+        small = np.asarray(b.ring.small[s], np.float64)
+        gauges = np.asarray(b.ring.gauges[s], np.float64)
+        vec = np.concatenate([small[:5], gauges.reshape(-1), small[5:]])
+        self._drain_slot(name, b, s, vec, int(b.t[s]))
+        with enable_x64():
+            b.ring = reset_ring_slot(b.ring, s)
+
+    # --- lifecycle ---------------------------------------------------------
+
+    def _bucket_of(self, handle) -> _Bucket:
+        return self._buckets[handle.key][handle.bucket]
+
+    def _finish(self, name: str, status: str) -> None:
+        handle = self._tenants[name]
+        assert handle.status == "active", (name, handle.status)
+        b = self._bucket_of(handle)
+        s = handle.slot
+        self._flush_slot(name, b, s)
+        carry = self._billing_carry[name]
+        carry["realized"] += b.bill_real[s].sum()
+        carry["vpn"] += b.bill_vpn[s].sum()
+        carry["cci"] += b.bill_cci[s].sum()
+        carry["gb"] += b.gb[s].sum()
+        b.clear_slot(s)
+        handle.status, handle.bucket, handle.slot = status, None, None
+        self._drain_admission_queue()
+
+    def leave(self, name: str) -> None:
+        """Remove an active tenant mid-stream: drain its metrics window,
+        bank its billing, free the slot, and admit from the queue — all
+        operand traffic, zero recompiles."""
+        self._finish(name, "left")
+
+    def resize(self, name: str, tenant: TenantSpec) -> TenantHandle:
+        """Grow/shrink a tenant across capacity buckets: admit the NEW shape
+        first (so a rejection leaves the tenant untouched), then retire the
+        old slot. Billing totals carry across; the stream restarts at the
+        new spec's hour 0 with fresh windows (a reshaped WAN is a new
+        planning problem — the carried prefix rings would be shape-nonsense).
+        """
+        handle = self._tenants.get(name)
+        assert handle is not None and handle.status == "active", name
+        old_key, old_bucket, old_slot = handle.key, handle.bucket, handle.slot
+        resolved = resolve_runtime_operands(tenant.spec, tenant.config)
+        key = bucket_key_for(resolved)
+        if max(key.rows_cap, key.pairs_cap) > self.config.max_rows:
+            raise AdmissionError(
+                "too_large",
+                f"tenant {name!r} resize pads over the gateway ceiling",
+            )
+        packed = pack_tenant(resolved, key)
+        # Flush the old incarnation's partial metrics window NOW, while its
+        # monitor is still registered (placement installs the new one); the
+        # later _finish re-flush then sees an empty ring and no-ops.
+        self._flush_slot(name, self._bucket_of(handle), old_slot)
+        # Reserve the new slot BEFORE freeing the old one.
+        probe = TenantHandle(name=name, status="queued", key=key)
+        if not self._try_place(probe, packed, tenant):
+            raise AdmissionError(
+                "queue_full",
+                f"no bucket has headroom to resize tenant {name!r}",
+            )
+        # Retire the old incarnation (banks billing, frees the slot).
+        handle.key, handle.bucket, handle.slot = old_key, old_bucket, old_slot
+        self._finish(name, "left")
+        self._tenants[name] = probe
+        self._specs[name] = tenant
+        self._resolved[name] = resolved
+        return probe
+
+    def reroute(self, name: str, routing) -> None:
+        """Swap one tenant's pair→port routing mid-stream — the standalone
+        :meth:`FleetRuntime.reroute` contract, as one ``.at[slot]`` operand
+        write into the pooled index stack (never a recompile)."""
+        handle = self._tenants[name]
+        assert handle.status == "active", (name, handle.status)
+        assert handle.key.topology, (
+            "reroute() applies to topology (shared-port) tenants"
+        )
+        b = self._bucket_of(handle)
+        s = handle.slot
+        resolved = self._resolved[name]
+        m, p = int(b.m[s]), int(b.p[s])
+        r = np.asarray(routing)
+        with enable_x64():
+            if r.ndim == 2:
+                assert r.shape == (m, p), (r.shape, (m, p))
+                assert np.all(r.sum(axis=0) == 1.0) and set(
+                    np.unique(r)
+                ) <= {0.0, 1.0}, "routing must be one-hot per pair"
+                r = np.argmax(r, axis=0)
+            if resolved.spec is not None:
+                r = resolved.spec.validate_routing(r)
+            else:
+                assert np.all((0 <= r) & (r < m)), r
+            idx = np.concatenate([
+                np.asarray(r, np.int64),
+                np.full(b.key.pairs_cap - p, b.key.rows_cap - 1, np.int64),
+            ])
+            b.routing_idx = b.routing_idx.at[s].set(
+                jnp.asarray(idx, jnp.int32)
+            )
+        b.routing_idx_np[s] = idx
+
+    # --- queries -----------------------------------------------------------
+
+    def handle(self, name: str) -> TenantHandle:
+        return self._tenants[name]
+
+    @property
+    def n_active(self) -> int:
+        return sum(1 for h in self._tenants.values() if h.status == "active")
+
+    @property
+    def n_queued(self) -> int:
+        return len(self._queue)
+
+    @property
+    def n_buckets(self) -> int:
+        return sum(len(v) for v in self._buckets.values())
+
+    def billing(self, name: str) -> Dict[str, float]:
+        """Lifetime host-side float64 totals (across resizes and departure):
+        realized $, VPN/CCI counterfactual $, billed GB."""
+        totals = dict(self._billing_carry[name])
+        handle = self._tenants[name]
+        if handle.status == "active":
+            b, s = self._bucket_of(handle), handle.slot
+            totals["realized"] += b.bill_real[s].sum()
+            totals["vpn"] += b.bill_vpn[s].sum()
+            totals["cci"] += b.bill_cci[s].sum()
+            totals["gb"] += b.gb[s].sum()
+        return {k: float(v) for k, v in totals.items()}
+
+    def metrics(self, name: str) -> List[DrainedMetrics]:
+        """The tenant's drained metrics windows (current incarnation)."""
+        return list(self._drained.get(name, []))
+
+    def check(self, *, final: bool = True) -> List[ContractViolation]:
+        """Flush every active tenant's partial metrics window through its
+        :class:`~repro.obs.monitors.TenantSLOMonitor` and return ALL
+        violations recorded so far (typed, tenant-attributed). The gateway
+        records rather than raises — one tenant's breach must not stall the
+        others' streams."""
+        if final and self._obs:
+            for handle in self._tenants.values():
+                if handle.status == "active":
+                    self._flush_slot(
+                        handle.name, self._bucket_of(handle), handle.slot
+                    )
+        return list(self.violations)
+
+    def sync_groups(self, name: str, out=None) -> List[int]:
+        """Per-job sync-domain ids for
+        :func:`repro.dist.collectives.fleet_sync_grads` (pass
+        ``tenant=name`` there so the HLO labels attribute bytes per tenant):
+        routed-port ids in topology mode, row ids in fleet mode."""
+        handle = self._tenants[name]
+        assert handle.status == "active", (name, handle.status)
+        b, s = self._bucket_of(handle), handle.slot
+        p = int(b.p[s])
+        if not handle.key.topology:
+            return list(range(int(b.m[s])))
+        return [int(g) for g in b.routing_idx_np[s, :p]]
+
+    def modes(self, name: str, out, *, mode_fn=None) -> List[str]:
+        """Map one tenant's step output to per-actuator collective modes
+        (the standalone :meth:`FleetRuntime.modes` contract)."""
+        if mode_fn is None:
+            mode_fn = collective_mode
+        handle = self._tenants[name]
+        states = np.asarray(out["state"])
+        if handle.key.topology:
+            b, s = self._bucket_of(handle), handle.slot
+            states = states[b.routing_idx_np[s, : int(b.p[s])]]
+        return [mode_fn(int(v)) for v in states]
+
+
+__all__ = [
+    "AdmissionError",
+    "FleetGateway",
+    "GatewayConfig",
+    "TenantHandle",
+    "TenantSLO",
+    "TenantSpec",
+]

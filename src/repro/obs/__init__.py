@@ -3,7 +3,7 @@ contract monitors, and profiling hooks for the streaming runtime.
 
 Quickstart::
 
-    from repro.fleet import FleetRuntime
+    from repro.fleet.stream import FleetRuntime
     from repro.obs import ObsConfig
 
     rt = FleetRuntime(spec, obs=ObsConfig(divergence=True))
@@ -26,7 +26,9 @@ from .metrics import (
     default_hist_edges,
     flatten_ring,
     init_ring,
+    init_tenant_ring,
     reset_ring,
+    reset_ring_slot,
     ring_layout,
     ring_size,
     update_ring,
@@ -37,6 +39,7 @@ from .monitors import (
     ContractViolation,
     DivergenceMonitor,
     RegretMonitor,
+    TenantSLOMonitor,
 )
 from .observer import FleetObserver, ObsConfig, ObsReport
 from .profile import TickProfiler
@@ -53,12 +56,15 @@ __all__ = [
     "ObsConfig",
     "ObsReport",
     "RegretMonitor",
+    "TenantSLOMonitor",
     "TickProfiler",
     "TraceRecorder",
     "default_hist_edges",
     "flatten_ring",
     "init_ring",
+    "init_tenant_ring",
     "reset_ring",
+    "reset_ring_slot",
     "ring_layout",
     "ring_size",
     "trace_from_plan",

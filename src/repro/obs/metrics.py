@@ -112,6 +112,30 @@ def reset_ring(ring: MetricsRing) -> MetricsRing:
     return zeroed._replace(prev_state=ring.prev_state)
 
 
+def init_tenant_ring(
+    n_slots: int, n_rows: int, cap: int, n_bins: int, n_tiers: int,
+    dtype=jnp.float64,
+) -> MetricsRing:
+    """A pool of ``n_slots`` per-tenant rings as ONE ring pytree with a
+    leading tenant axis on every leaf — the vmapped mega-tick of the
+    multi-tenant gateway updates all slots through the SAME
+    :func:`update_ring` path the standalone runtime compiles (one metrics
+    path, lifted one axis; see :mod:`repro.gateway`)."""
+    one = init_ring(n_rows, cap, n_bins, n_tiers, dtype)
+    return jax.tree.map(
+        lambda x: jnp.tile(x, (n_slots,) + (1,) * x.ndim), one
+    )
+
+
+def reset_ring_slot(ring: MetricsRing, slot: int) -> MetricsRing:
+    """Reset ONE tenant slot of a pooled ring to its initial state (zeros,
+    ``prev_state`` back to OFF) — a tenant joining mid-window must not
+    inherit the previous occupant's counters or FSM edge baseline."""
+    return jax.tree.map(lambda p: p.at[slot].set(jnp.zeros_like(p[slot])), ring)._replace(
+        prev_state=ring.prev_state.at[slot].set(OFF)
+    )
+
+
 def update_ring(
     ring: MetricsRing,
     hist_edges: jax.Array,

@@ -451,3 +451,93 @@ class CalibrationMonitor:
             "bias": self.bias() if self.enabled else None,
             "mae_gb_per_h": self.mae() if self.enabled else None,
         }
+
+
+class TenantSLOMonitor:
+    """Per-tenant SLO + billing reconciliation over a gateway pool slot.
+
+    The gateway's pooled twin of :class:`BillingMonitor`: one instance per
+    tenant, fed at every gateway drain with (a) the tenant's slot of the
+    pooled device metrics ring (already pad-corrected and unpacked to a
+    :class:`DrainedMetrics`) and (b) the tenant's host-side float64 billing
+    accumulators. Checks two contracts:
+
+    * **billing** — the cumulative device-drained realized/vpn/cci/volume
+      totals must reconcile with the host accumulators (XLA reduction order
+      differs, so aggregates compare under ``rtol``);
+    * **slo**     — when the tenant declared a cost budget, the drained
+      window's mean realized $/h must not exceed it.
+
+    Violations are RECORDED (returned as typed :class:`ContractViolation`
+    values, tenant-attributed via ``details``), not raised — the gateway
+    keeps serving the other tenants and surfaces breaches through its
+    ``check()``, mirroring ``FleetRuntime.obs_check()``.
+    """
+
+    name = "tenant_slo"
+
+    def __init__(
+        self,
+        tenant: str,
+        *,
+        max_hourly_cost: Optional[float] = None,
+        rtol: float = 1e-9,
+        atol: float = 1e-6,
+    ):
+        self.tenant = str(tenant)
+        self.max_hourly_cost = (
+            None if max_hourly_cost is None else float(max_hourly_cost)
+        )
+        self.rtol = float(rtol)
+        self.atol = float(atol)
+        self.dev = {"realized": 0.0, "vpn": 0.0, "cci": 0.0, "gb": 0.0}
+        self.ticks = 0
+        self.checks = 0
+
+    def on_drain(
+        self, hour: int, dm: DrainedMetrics, *, host_totals: dict
+    ) -> List[ContractViolation]:
+        """One drained window: accumulate device totals, then check. ``hour``
+        is the TENANT-local stream hour; ``host_totals`` carries the host
+        f64 accumulator sums (``realized``/``vpn``/``cci``/``gb``)."""
+        out: List[ContractViolation] = []
+        self.dev["realized"] += float(dm.realized_cost.sum())
+        self.dev["vpn"] += float(dm.vpn_cost.sum())
+        self.dev["cci"] += float(dm.cci_cost.sum())
+        self.dev["gb"] += float(dm.billed_gb.sum())
+        self.ticks += dm.ticks
+        self.checks += 1
+        for k in ("realized", "vpn", "cci", "gb"):
+            mine, theirs = self.dev[k], float(host_totals[k])
+            if not np.isclose(mine, theirs, rtol=self.rtol, atol=self.atol):
+                out.append(ContractViolation(
+                    self.name,
+                    f"tenant {self.tenant!r}: device-drained {k} total "
+                    f"{mine:.6g} disagrees with host billing {theirs:.6g}",
+                    hour=hour,
+                    details={"tenant": self.tenant, "metric": k,
+                             "device": mine, "host": theirs},
+                ))
+        if self.max_hourly_cost is not None and dm.ticks > 0:
+            rate = float(dm.realized_cost.sum()) / dm.ticks
+            if rate > self.max_hourly_cost * (1.0 + self.rtol) + self.atol:
+                out.append(ContractViolation(
+                    self.name,
+                    f"tenant {self.tenant!r}: realized {rate:.6g} $/h over "
+                    f"the drained window exceeds the SLO budget "
+                    f"{self.max_hourly_cost:.6g} $/h",
+                    hour=hour,
+                    details={"tenant": self.tenant, "rate": rate,
+                             "budget": self.max_hourly_cost},
+                ))
+        return out
+
+    def summary(self) -> dict:
+        return {
+            "tenant": self.tenant,
+            "checks": self.checks,
+            "ticks": self.ticks,
+            "realized_cost": self.dev["realized"],
+            "billed_gb": self.dev["gb"],
+            "budget": self.max_hourly_cost,
+        }

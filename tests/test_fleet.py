@@ -10,7 +10,7 @@ import jax.numpy as jnp
 from repro.core.costmodel import tiered_marginal_cost_tables
 from repro.core.pricing import CostParams, TieredRate, flat_rate, make_scenario
 from repro.core.togglecci import run_togglecci
-from repro.fleet import (
+from repro.fleet.plan import (
     FleetScenario,
     FleetSpec,
     LinkSpec,

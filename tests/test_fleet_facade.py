@@ -1,0 +1,61 @@
+"""The versioned ``repro.fleet`` facade: three namespaces, a declared
+``__all__``, and every pre-namespace flat name still importable through a
+shim that raises ``DeprecationWarning`` and resolves to the SAME object."""
+import importlib
+import warnings
+
+import pytest
+
+import repro.fleet as fleet
+from repro.fleet import observe, plan, stream
+
+
+def test_facade_declares_namespaces():
+    assert fleet.__all__ == ["observe", "plan", "stream"]
+    # The namespaces re-export with their own __all__ (documented surface).
+    for ns in (plan, stream, observe):
+        assert ns.__all__, ns.__name__
+        for name in ns.__all__:
+            assert hasattr(ns, name), (ns.__name__, name)
+
+
+@pytest.mark.parametrize(
+    "name", sorted(fleet._LEGACY_HOME), ids=lambda n: n
+)
+def test_every_legacy_flat_name_warns_and_resolves(name):
+    """Each old ``from repro.fleet import X`` spelling keeps working for one
+    release: it warns, and hands back the identical defining-module object."""
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        got = getattr(fleet, name)
+    assert any(
+        issubclass(x.category, DeprecationWarning) and name in str(x.message)
+        for x in w
+    ), f"{name} must raise DeprecationWarning"
+    home = importlib.import_module(fleet._LEGACY_HOME[name])
+    assert got is getattr(home, name)
+    # And the same object is reachable warning-clean via its new namespace.
+    ns = importlib.import_module(fleet._NAMESPACE_OF[fleet._LEGACY_HOME[name]])
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        assert getattr(ns, name) is got
+
+
+def test_unknown_attribute_still_raises():
+    with pytest.raises(AttributeError, match="no attribute"):
+        fleet.definitely_not_a_fleet_name
+
+
+def test_namespace_imports_are_warning_clean():
+    """The migrated spellings must not trip the deprecation shims."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        from repro.fleet.plan import plan_fleet  # noqa: F401
+        from repro.fleet.stream import FleetRuntime, RuntimeConfig  # noqa: F401
+        from repro.fleet.observe import ContractViolation  # noqa: F401
+
+
+def test_dir_lists_both_surfaces():
+    names = dir(fleet)
+    assert {"plan", "stream", "observe"} <= set(names)
+    assert "plan_fleet" in names and "FleetRuntime" in names

@@ -28,9 +28,7 @@ import jax.numpy as jnp
 from jax.experimental import enable_x64
 
 from repro.core.pricing import CostParams, TieredRate
-from repro.fleet import (
-    ElasticFleetPlanner,
-    FleetRuntime,
+from repro.fleet.plan import (
     build_fleet_scenario,
     build_topology_scenario,
     forecast_fleet_policy,
@@ -43,6 +41,10 @@ from repro.fleet import (
     plan_topology,
     policy_scan,
     reactive_policy,
+)
+from repro.fleet.stream import (
+    ElasticFleetPlanner,
+    FleetRuntime,
     streaming_forecast_policy,
 )
 from repro.fleet.policy import fit_cost_coef
@@ -275,7 +277,7 @@ def test_reroute_matches_offline_replay_bit_for_bit(seed):
     hour — decisions bit-for-bit over the WHOLE horizon (window sums near
     the swap mix old- and new-routing hours identically on both sides),
     for reactive, hysteresis and forecast-replay policies."""
-    from repro.fleet import replay_plan_topology
+    from repro.fleet.plan import replay_plan_topology
 
     rng = np.random.default_rng(seed)
     sc = build_topology_scenario(
@@ -360,7 +362,7 @@ def test_obs_on_off_decisions_bit_exact(seed):
 def test_replay_single_segment_is_plan_topology():
     """A one-entry schedule must reproduce plan_topology bit-for-bit (the
     replay oracle degenerates to the offline planner)."""
-    from repro.fleet import plan_topology, replay_plan_topology
+    from repro.fleet.plan import plan_topology, replay_plan_topology
 
     sc = build_topology_scenario(8, n_facilities=3, horizon=400, seed=2)
     r0 = optimize_routing(sc.topo, sc.demand)
@@ -381,7 +383,7 @@ def test_replay_single_segment_is_plan_topology():
 def test_reroute_guards_and_modes_mapping():
     """reroute() is topology-only, validates against the spec, and modes()
     maps port states onto PAIRS through the current routing."""
-    from repro.fleet import build_reroute_scenario
+    from repro.fleet.plan import build_reroute_scenario
 
     sc = build_reroute_scenario(horizon=300, shift_hour=150, seed=0)
     rt = FleetRuntime(sc.topo, routing=[0, 0, 1])
@@ -411,7 +413,7 @@ def test_reroute_guards_and_modes_mapping():
 def test_reroute_demo_scenario_realizes_savings():
     """The CI demo's core claim, in-tree: live re-routing onto the freed
     hub port beats the frozen day-one routing on realized streamed cost."""
-    from repro.fleet import build_reroute_scenario
+    from repro.fleet.plan import build_reroute_scenario
 
     sc = build_reroute_scenario(horizon=1400, shift_hour=500, seed=1)
     r0 = optimize_routing(sc.topo, sc.demand[:, :168])
@@ -542,7 +544,7 @@ def test_elastic_planner_per_port_topology_mode():
     through the routing; the report carries per-PORT lease occupancy and
     per-pair wire-byte savings instead of assuming one link per row."""
     from repro.core.pricing import flat_rate
-    from repro.fleet import PairSpec, PortSpec, TopologySpec
+    from repro.fleet.plan import PairSpec, PortSpec, TopologySpec
 
     mk_port = lambda n, f: PortSpec(
         name=n, facility=f, cloud="aws", L_cci=4.55, V_cci=0.1,

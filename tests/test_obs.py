@@ -25,13 +25,13 @@ import jax.numpy as jnp
 from jax.experimental import enable_x64
 
 from repro.core.togglecci import OFF, ON, WAITING
-from repro.fleet import (
-    FleetRuntime,
+from repro.fleet.plan import (
     build_fleet_scenario,
     build_topology_scenario,
     forecast_gated_policy,
     optimize_routing,
 )
+from repro.fleet.stream import FleetRuntime
 from repro.fleet.policy import fit_cost_coef
 from repro.obs import (
     ContractViolation,

@@ -21,7 +21,7 @@ from jax.experimental import enable_x64
 from repro.core.costmodel import HourlyCosts, hourly_cost_series
 from repro.core.pricing import CostParams, TieredRate, flat_rate
 from repro.core.togglecci import OFF, ToggleParams, run_togglecci
-from repro.fleet import (
+from repro.fleet.plan import (
     build_fleet_scenario,
     build_topology_report,
     build_topology_scenario,
@@ -401,7 +401,7 @@ def test_report_forecast_and_refinement_columns():
     )
     routing = optimize_routing(sc.topo, sc.demand)
     plan = plan_topology(sc.topo, sc.demand, routing=routing)
-    from repro.fleet import forecast_topology_policy
+    from repro.fleet.plan import forecast_topology_policy
 
     with enable_x64():
         arrays = sc.topo.stack(routing, jnp.float64)

@@ -18,7 +18,7 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.core.pricing import flat_rate
-from repro.fleet import (
+from repro.fleet.plan import (
     PairSpec,
     PortSpec,
     TopologySpec,

@@ -11,7 +11,7 @@ from hypothesis import strategies as st
 
 from repro.core.pricing import flat_rate
 from repro.core.togglecci import window_sums
-from repro.fleet import (
+from repro.fleet.plan import (
     PairSpec,
     PortSpec,
     TopologyScenario,
@@ -150,7 +150,7 @@ def test_topology_engine_matches_reference_all_families(seed):
     aggregation reproduces the independent numpy aggregation to f64 ulp
     (comparing decisions ACROSS the two aggregations directly would be
     flaky whenever a window sum lands within an ulp of a θ threshold)."""
-    from repro.fleet import topology_port_costs_reference
+    from repro.fleet.plan import topology_port_costs_reference
 
     sc = build_topology_scenario(12, n_facilities=3, horizon=HORIZON, seed=seed)
     assert set(sc.summary()) == {"constant", "bursty", "mirage", "puffer"}

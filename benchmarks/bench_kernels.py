@@ -31,7 +31,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.costmodel import monthly_cumsum, tiered_marginal_cost_tables
-from repro.kernels.tiered_cost import DEFAULT_BLOCK_T, tiered_cost_batched
+from repro.kernels.tiered_cost import (
+    DEFAULT_BLOCK_T,
+    tiered_cost_batched,
+    tiered_cost_scan,
+    tiered_cost_scan_ref,
+)
 
 from ._util import save_rows, write_bench_artifact
 
@@ -84,7 +89,36 @@ def run(n_links: int = 128, horizon: int = 8704, *, repeats: int = 5, seed: int 
 
     xla_s = _time(xla, cum, d, bounds, rates, repeats=repeats)
     pallas_s = _time(pallas, cum, d, bounds, rates, repeats=repeats)
+
+    # Chunked streaming variant: K=24 inner hours, tier carry in VMEM.
+    # The 730 h billing month never resets inside a 24 h chunk here; the
+    # kernel's reset lane is exercised by tests/test_kernels.py.
+    chunk_k = 24
+    cum0 = cum[:, 0]
+    d_chunk = jax.lax.slice(d, (0, 0), (n_links, chunk_k))
+    reset = jnp.zeros(chunk_k, jnp.int32)
+    scan_pallas = jax.jit(
+        lambda c0, dd, b, r, rs: tiered_cost_scan(
+            c0, dd, b, r, rs, interpret=interpret
+        )
+    )
+    scan_xla = jax.jit(tiered_cost_scan_ref)
+    sc_got, _ = scan_pallas(cum0, d_chunk, bounds, rates, reset)
+    sc_ref, _ = scan_xla(cum0, d_chunk, bounds, rates, reset)
+    scan_rel_err = float(
+        np.abs(np.asarray(sc_got) - np.asarray(sc_ref)).max()
+        / max(float(np.abs(np.asarray(sc_ref)).max()), 1e-6)
+    )
+    assert scan_rel_err < 1e-5, (
+        f"scan kernel diverged from the XLA scan twin: {scan_rel_err:.2e}"
+    )
+    scan_pallas_s = _time(scan_pallas, cum0, d_chunk, bounds, rates, reset,
+                          repeats=repeats)
+    scan_xla_s = _time(scan_xla, cum0, d_chunk, bounds, rates, reset,
+                       repeats=repeats)
+
     link_hours = n_links * horizon
+    scan_link_hours = n_links * chunk_k
     rows = [{
         "links": n_links,
         "horizon": horizon,
@@ -96,6 +130,12 @@ def run(n_links: int = 128, horizon: int = 8704, *, repeats: int = 5, seed: int 
         "pallas_link_hours_per_s": link_hours / pallas_s,
         "pallas_vs_xla_speedup": xla_s / pallas_s,
         "max_rel_err": max_rel_err,
+        "scan_chunk_k": chunk_k,
+        "scan_xla_s": scan_xla_s,
+        "scan_pallas_s": scan_pallas_s,
+        "scan_xla_link_hours_per_s": scan_link_hours / scan_xla_s,
+        "scan_pallas_link_hours_per_s": scan_link_hours / scan_pallas_s,
+        "scan_max_rel_err": scan_rel_err,
     }]
     save_rows("kernels", rows)
     r = rows[0]
@@ -130,6 +170,12 @@ def main() -> None:
         f"link-hours/s), Pallas {r['pallas_s'] * 1e3:.2f} ms "
         f"({'interpret' if r['pallas_interpret'] else 'compiled'}), "
         f"max rel err {r['max_rel_err']:.1e}"
+    )
+    print(
+        f"kernels: K={r['scan_chunk_k']} chunked scan -> "
+        f"XLA {r['scan_xla_s'] * 1e3:.2f} ms, Pallas "
+        f"{r['scan_pallas_s'] * 1e3:.2f} ms, "
+        f"max rel err {r['scan_max_rel_err']:.1e}"
     )
     print(derived)
     if args.smoke:

@@ -12,9 +12,13 @@ Three tenants with different shapes share ONE :class:`FleetGateway`:
   ``TenantSLO`` hourly budget, so its drains raise typed, tenant-attributed
   ``ContractViolation``s while everyone else streams on undisturbed.
 
-Every simulated hour is ONE ``gw.tick()``: a single jitted vmapped dispatch
-advances every alive tenant in every capacity bucket, the padded pool rows
-inert by construction. Per-tenant billing runs in host float64 exactly like
+The steady loop advances ONE DAY per dispatch: ``gw.tick_many(24)`` runs
+the chunked mega-tick (bit-exact vs 24 sequential ``gw.tick()`` calls — the
+reroute and churn land on chunk boundaries, where they behave exactly as
+between two per-tick hours), and the ragged tail finishes per-tick with
+``gw.tick()`` — the two interleave freely. Each dispatch advances every
+alive tenant in every capacity bucket, the padded pool rows inert by
+construction. Per-tenant billing runs in host float64 exactly like
 the standalone runtime's, and the demo closes with the actuation hand-off:
 ``gw.sync_groups``/``gw.modes`` feed ``fleet_sync_grads(tenant="acme")`` so
 the leased sync domains land in the HLO labeled per tenant
@@ -42,8 +46,10 @@ from repro.launch.mesh import make_host_mesh
 
 HOURS = 200
 CADENCE = 48
-REROUTE_AT = 100      # acme re-packs its hottest pair
-CHURN_AT = 150        # globex leaves; hooli takes the freed slot
+CHUNK_K = 24          # tick_many chunk: divides CADENCE so obs drains stay
+                      # chunk-aligned
+REROUTE_AT = 96       # acme re-packs its hottest pair (a chunk boundary)
+CHURN_AT = 144        # globex leaves; hooli takes the freed slot (boundary)
 
 
 def main() -> None:
@@ -70,35 +76,45 @@ def main() -> None:
 
     last = {}
     groups = modes = None
-    for hour in range(HOURS):
-        for name, out in gw.tick().items():
-            last[name] = out
-        if hour == HOURS - 2:
-            # Capture the actuation hand-off while acme is still active
-            # (tenants retire from the pool when their horizon completes).
-            groups = gw.sync_groups("acme")
-            modes = gw.modes("acme", last["acme"])
-        if hour == REROUTE_AT - 1:
+    steady = (HOURS // CHUNK_K) * CHUNK_K   # chunked days, then ragged tail
+    hour = 0
+    while hour < steady:
+        for name, out in gw.tick_many(CHUNK_K).items():
+            # keep each tenant's latest column (tick_many stacks (rows, K))
+            last[name] = {k: np.asarray(v)[..., -1] for k, v in out.items()}
+        hour += CHUNK_K
+        if hour == REROUTE_AT:
             # Re-pack acme's hottest pair onto its least-loaded port: a pure
-            # pooled-operand write, mid-stream, state intact.
+            # pooled-operand write at the chunk boundary, state intact.
             idx = np.asarray(r0).copy()     # (P,) routed-port indices
             hot = int(np.argmax(tsc.demand[:, :REROUTE_AT].mean(axis=1)))
-            load = np.bincount(idx, weights=np.asarray(tsc.demand[:, hour]),
-                               minlength=len(tsc.topo.ports))
+            load = np.bincount(
+                idx, weights=np.asarray(tsc.demand[:, hour - 1]),
+                minlength=len(tsc.topo.ports),
+            )
             idx[hot] = int(np.argmin(load))
             before = gw.compiles
             gw.reroute("acme", tsc.topo.validate_routing(idx))
-            print(f"hour {hour + 1}: acme rerouted pair {hot} -> port "
+            print(f"hour {hour}: acme rerouted pair {hot} -> port "
                   f"{idx[hot]} (compiles {before} -> {gw.compiles})")
-        if hour == CHURN_AT - 1:
+        if hour == CHURN_AT:
             before = gw.compiles
             gw.leave("globex")
             gw.join("hooli", TenantSpec(
                 spec=fsc.fleet, demand=fsc.demand * 0.7,
                 horizon=HOURS - CHURN_AT,
             ))
-            print(f"hour {hour + 1}: globex left, hooli joined the freed "
+            print(f"hour {hour}: globex left, hooli joined the freed "
                   f"slot (compiles {before} -> {gw.compiles})")
+    while hour < HOURS:                     # per-tick tail interleaves freely
+        for name, out in gw.tick().items():
+            last[name] = out
+        hour += 1
+        if hour == HOURS - 1:
+            # Capture the actuation hand-off while acme is still active
+            # (tenants retire from the pool when their horizon completes).
+            groups = gw.sync_groups("acme")
+            modes = gw.modes("acme", last["acme"])
 
     print(f"\nstreamed {HOURS} hours; mega-tick compiled {gw.compiles} "
           f"time(s) total across {gw.n_buckets} bucket(s)")

@@ -39,7 +39,11 @@ from repro.obs import ContractViolation, ObsConfig
 
 HORIZON = 500
 CADENCE = 48          # metrics-ring drain period, simulated hours
-REROUTE_AT = 250      # swap one pair to another candidate port mid-stream
+CHUNK_K = 24          # step_many chunk; divides CADENCE so drains stay
+                      # chunk-aligned (they ride the chunk's packed D2H)
+REROUTE_AT = 240      # swap one pair to another candidate port mid-stream
+                      # (a chunk boundary — same semantics as between two
+                      # per-tick step() calls)
 
 
 def main() -> None:
@@ -70,10 +74,18 @@ def main() -> None:
             r1[i] = int(others[0])
             break
 
-    for t in range(HORIZON):
+    # Steady loop: one chunked dispatch per simulated day (step_many is
+    # bit-exact vs per-tick step(), so the monitors audit the same stream),
+    # finishing the ragged tail per-tick — the two interleave freely.
+    t = 0
+    while t + CHUNK_K <= HORIZON:
         if t == REROUTE_AT and not np.array_equal(r1, np.asarray(r0)):
             rt.reroute(r1)
+        rt.step_many(sc.demand[:, t:t + CHUNK_K])
+        t += CHUNK_K
+    while t < HORIZON:
         rt.step(sc.demand[:, t])
+        t += 1
 
     # Every contract held on the honest stream (billing reconciliation,
     # streamed == offline replay across the reroute, regret bound).

@@ -173,20 +173,37 @@ def tiered_marginal_cost_tables(
     heterogeneous links in one XLA op. Pad ragged tables with
     ``(bound=1e30, rate=0)`` rows: duplicate bounds make zero-width
     segments, so padding never contributes cost.
+
+    The tier axis is unrolled as a left fold from zero (K is small and
+    static) rather than broadcast to a ``(..., T, K)`` temp and reduced:
+    the fold keeps every intermediate at the ``(..., T)`` operand shape —
+    XLA:CPU fuses the whole chain where it leaves the 3-D broadcast temps
+    materialized — and fixes the summation ASSOCIATION, so every caller
+    (offline planners, the per-tick runtime, the chunked ``step_many``
+    planes, which inline this same op chain in their own orientation)
+    produces bit-identical f64 costs.
     """
     acc = jnp.result_type(start_gb.dtype, added_gb.dtype, jnp.result_type(float))
     bounds = bounds.astype(acc)
     rates = rates.astype(acc)
-    prev = jnp.concatenate(
-        [jnp.zeros(bounds.shape[:-1] + (1,), acc), bounds[..., :-1]], axis=-1
-    )
-    lo = start_gb.astype(acc)[..., None]                 # (..., T, 1)
-    hi = lo + added_gb.astype(acc)[..., None]
-    seg = jnp.clip(
-        jnp.minimum(hi, bounds[..., None, :]) - jnp.maximum(lo, prev[..., None, :]),
-        0.0,
-    )
-    return jnp.sum(seg * rates[..., None, :], axis=-1)
+    lo = start_gb.astype(acc)
+    hi = lo + added_gb.astype(acc)
+    out = jnp.zeros((), acc)
+    prev = jnp.zeros(bounds.shape[:-1] + (1,), acc)
+    for j in range(bounds.shape[-1]):
+        b_j = bounds[..., j:j + 1]                       # (..., 1) over T
+        seg = jnp.clip(jnp.minimum(hi, b_j) - jnp.maximum(lo, prev), 0.0)
+        # The where() keeps the product from feeding the fold add directly:
+        # XLA:CPU emits mul-feeding-add as llvm.fmuladd, and LLVM then
+        # contracts it to a real FMA in some fusion contexts and not others
+        # — the last bit of the cost would differ between compiled variants
+        # of this same formula (an optimization_barrier does NOT help; the
+        # CPU backend expands it away before fusion). seg is clipped ≥ 0
+        # and rates are finite, so the select is value-identical to the
+        # plain product.
+        out = out + jnp.where(seg > 0, seg * rates[..., j:j + 1], 0.0)
+        prev = b_j
+    return out
 
 
 def monthly_cumsum(demand: jax.Array, hours_per_month: int) -> jax.Array:

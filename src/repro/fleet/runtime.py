@@ -98,8 +98,10 @@ class RuntimeState(NamedTuple):
     dcum_month: np.ndarray  # (P,) dcum at the current month's start
     vpn_pref: np.ndarray    # (M,) exclusive prefix of hourly VPN cost
     cci_pref: np.ndarray    # (M,) exclusive prefix of hourly CCI cost
-    ring_vpn: np.ndarray    # (M, Hbuf) past vpn_pref values, slot = hour % Hbuf
-    ring_cci: np.ndarray    # (M, Hbuf)
+    ring_vpn: np.ndarray    # (Hbuf, M) past vpn_pref values, slot = hour % Hbuf
+                            # — hour-MAJOR so per-tick writes and chunked
+                            # multi-row commits are contiguous memcpys
+    ring_cci: np.ndarray    # (Hbuf, M)
     pred_live: np.ndarray   # (M,) next-tick demand forecast (zeros when unused)
     metrics: object         # device: obs MetricsRing pytree (None when the
                             # runtime was built without observability) —
@@ -323,6 +325,267 @@ def _build_step(
         return fsm, ssm_h, t + 1, ring, jnp.concatenate(outs)
 
     return step
+
+
+def _build_step_many(
+    topology: bool, pred_source: Optional[str], endo: bool,
+    obs: bool = False, drain: bool = False, K: int = 1,
+):
+    """K hours in ONE dispatch: batched pricing planes + an FSM-only scan.
+
+    The decomposition that makes chunking a real amortization (and not just
+    K per-tick bodies inside a loop): everything that depends ONLY on the
+    demand block — capacity clipping, tiered transfer pricing, route
+    aggregation, forecast-gate features — is computed as ``(rows, K)``
+    PLANE ops before the scan, exactly the offline engines' formulation
+    (whose bit-parity with per-tick stepping is the PR-5 contract: every
+    op is elementwise per (row, hour), so batching reassociates nothing).
+    What remains sequential is genuinely sequential state:
+
+    * the billing calendar (``dcum``/``dcum_month`` month-boundary
+      resets) — a tiny ``lax.scan`` over (P,) adds, bit-identical to the
+      host's numpy replay because each hour is one lone f64 add/select;
+    * the toggle window prefixes — same tiny scan shape, emitting the
+      start-of-hour snapshots the window sums and ring writes need;
+    * the FSM transition itself (+ the SSM forecaster step and metrics
+      ring update in live/obs modes) — the ONLY per-row work left in the
+      main scan body.
+
+    The (M, hbuf) prefix window rings never touch the device AT ALL: any
+    formulation that keeps them in the jitted fn pays ring-sized memory
+    traffic per chunk (a carried dynamic-update-slice copies the whole
+    ring every inner step, ~26 ms/chunk at 2048x337 f64; even a hoisted
+    post-scan ``.at[:, slots].set`` scatter lowers on CPU to a K-step
+    while loop entered through a full-ring copy — measured ~4 ms/chunk).
+    The host already maintains numpy ring twins in its replay loop, so
+    the caller GATHERS the pre-chunk window reads from them up front and
+    packs the two (rows, K) planes into the chunk's single H2D block;
+    in-chunk reads — hour t+k reading a slot this same chunk writes,
+    i.e. rows with window h < K — come from the prefix-scan snapshot
+    planes instead. Same f64 values either way (host and device prefixes
+    are bit-identical twins), and the device only ever touches (rows, K)
+    planes.
+
+    ``hpm`` (the billing calendar) rides as a traced int operand so
+    calendars don't multiply compiled variants; ``K`` is static (one
+    compiled chunk per length). ``drain``: with obs on, the metrics ring
+    is flattened/reset AFTER the scan — equivalent to the per-tick drain
+    variant firing on the chunk's last hour, which is the only hour a
+    drain cadence boundary is allowed to touch (the caller asserts the
+    alignment). Per-hour outputs come home as ``(K, rows)`` planes in the
+    per-tick ``po`` order with the window sums appended, so the host can
+    reconstruct each hour's ``step()`` dict and replay the commits
+    through its numpy accumulators. Bit-exactness vs per-tick ``step()``
+    is property-tested in ``tests/test_fleet_runtime.py``.
+    """
+
+    def step_many(arrays, policy, fc, fsm, ssm_h, t, routing_idx, ring,
+                  hist_edges, hpm, seq, demand_block):
+        f = jnp.result_type(float)
+        P = (arrays.pair_capacity if topology else arrays.capacity).shape[0]
+        M = arrays.toggle.theta1.shape[0]
+        dcum, dcum_month, vpn_pref, cci_pref, pred_live = seq
+        h = jnp.broadcast_to(jnp.asarray(arrays.toggle.h, jnp.int32), (M,))
+        t0 = t
+        ks = jnp.arange(K, dtype=jnp.result_type(t))
+
+        # --- unpack the single packed H2D block ---------------------------
+        # FLAT 1D layout, every segment written contiguously on the host:
+        # K*P demand values in the caller's native (P, K) row-major order
+        # [+ K*P endo], then the host's pre-chunk window-ring reads as
+        # (K, M) planes (prefix values at hour t+k-h for slots older than
+        # the chunk — gathered from the numpy ring twins straight into the
+        # buffer). The demand transpose to (K, P) happens HERE, on device,
+        # where it fuses into the pricing clamp; every plane after it keeps
+        # the hours-leading, rows-minor orientation, so the scans consume
+        # rows directly and the output planes ship home transpose-free.
+        nd = (2 if endo else 1) * K * P
+        d_cols = demand_block[:K * P].reshape(P, K).T         # (K, P)
+        pre_v = demand_block[nd:nd + K * M].reshape(K, M)
+        pre_c = demand_block[nd + K * M:nd + 2 * K * M].reshape(K, M)
+
+        # --- pricing planes (demand-only; the offline formulation) --------
+        cap = arrays.pair_capacity if topology else arrays.capacity
+        d_pair = jnp.minimum(d_cols.astype(f), cap[None, :])  # (K, P)
+        if endo:
+            d_cci_raw = jnp.minimum(
+                demand_block[K * P:2 * K * P].reshape(P, K).T.astype(f),
+                cap[None, :],
+            )
+        else:
+            d_cci_raw = d_pair
+
+        # Billing calendar: sequential month-boundary resets over (P,)
+        # vectors (one f64 add + one select per hour — bit-identical to the
+        # host replay; a parallel cumsum would reassociate, this does not).
+        def cal_body(carry, d_k):
+            dcum, dcum_month, tk = carry
+            dcum_month = jnp.where(tk % hpm == 0, dcum, dcum_month)
+            return (dcum + d_k, dcum_month, tk + 1), dcum - dcum_month
+
+        (dcum, dcum_month, _), month_cum = jax.lax.scan(
+            cal_body, (dcum, dcum_month, t0), d_pair
+        )                                                     # (K, P)
+
+        # Tier pricing, unrolled over the Kt tier columns so every
+        # intermediate is a fusible (K, P) plane. This is the same
+        # per-element f64 op chain as tiered_marginal_cost_tables —
+        # min/max/clip per segment and a left fold from zero over tiers —
+        # so the bits match the per-tick path exactly; the broadcast
+        # (K, P, Kt) temps of the table formulation stay unfused on
+        # XLA:CPU and cost ~15MB of memory traffic per chunk.
+        bounds = arrays.tier_bounds.astype(f)                 # (P, Kt)
+        rates = arrays.tier_rates.astype(f)
+        hi = month_cum + d_pair
+        vpn_transfer = jnp.zeros((), f)
+        prev_b = jnp.zeros((bounds.shape[0],), f)
+        for j in range(bounds.shape[-1]):
+            seg_j = jnp.clip(
+                jnp.minimum(hi, bounds[None, :, j])
+                - jnp.maximum(month_cum, prev_b[None, :]),
+                0.0,
+            )
+            # Same FMA guard as tiered_marginal_cost_tables: the where()
+            # keeps LLVM from contracting the product into the fold add
+            # (contraction is per-fusion-context, so chunked bits would
+            # drift from per-tick bits).
+            vpn_transfer = vpn_transfer + jnp.where(
+                seg_j > 0, seg_j * rates[None, :, j], 0.0
+            )
+            prev_b = bounds[:, j]
+        if topology:
+            vpn_pair = arrays.L_vpn[None, :] + vpn_transfer   # (K, P)
+            seg = jax.vmap(
+                lambda v: jax.ops.segment_sum(v, routing_idx, num_segments=M)
+            )
+            vpn_t = seg(vpn_pair)                             # (K, M)
+            d_bill = jnp.minimum(
+                seg(d_cci_raw), arrays.port_capacity[None, :]
+            )
+            n_pairs = jax.ops.segment_sum(
+                jnp.ones(P, f), routing_idx, num_segments=M
+            )                                                 # (M,)
+            cci_t = (
+                arrays.L_cci[None, :] + arrays.V_cci[None, :] * n_pairs[None, :]
+                + arrays.c_cci[None, :] * d_bill
+            )
+            d_row = jnp.minimum(seg(d_pair), arrays.port_capacity[None, :])
+        else:
+            vpn_t = arrays.L_vpn[None, :] + vpn_transfer
+            cci_t = (
+                (arrays.L_cci + arrays.V_cci)[None, :]
+                + arrays.c_cci[None, :] * d_cci_raw
+            )
+            d_row = d_pair
+
+        # --- toggle window planes -----------------------------------------
+        # Start-of-hour prefix snapshots (the exclusive-prefix convention:
+        # snapshot BEFORE the hour's cost is absorbed), then window sums
+        # against the hoisted ring reads.
+        def pref_body(carry, vc):
+            vpn_pref, cci_pref = carry
+            v_k, c_k = vc
+            return (vpn_pref + v_k, cci_pref + c_k), (vpn_pref, cci_pref)
+
+        (vpn_pref, cci_pref), (snap_v, snap_c) = jax.lax.scan(
+            pref_body, (vpn_pref, cci_pref), (vpn_t, cci_t)
+        )                                                     # snaps (K, M)
+        lo = jnp.maximum(0, (t0 + ks)[:, None] - h[None, :])  # (K, M)
+        in_chunk = lo >= t0
+        jj = jnp.clip(lo - t0, 0, K - 1)
+        in_v = jnp.take_along_axis(snap_v, jj, axis=0)
+        in_c = jnp.take_along_axis(snap_c, jj, axis=0)
+        r_vpn = snap_v - jnp.where(in_chunk, in_v, pre_v)     # (K, M)
+        r_cci = snap_c - jnp.where(in_chunk, in_c, pre_c)
+
+        # --- forecast gate features ---------------------------------------
+        pred_cols = None                                      # (K, M)
+        if pred_source == "replay":
+            idx = jnp.clip(t0 + ks, 0, policy.pred_demand.shape[1] - 1)
+            pred_cols = jnp.take(policy.pred_demand, idx, axis=1).T
+            extras_cols = predicted_mode_costs(
+                pred_cols, policy.cost_coef, f
+            )                                                 # ((K, M) x2)
+
+        # --- the sequential core: FSM (+ SSM / metrics ring) --------------
+        # xs is a dict pytree of per-hour columns; only what THIS variant's
+        # body consumes rides in it, so the scan carry stays minimal (the
+        # FSM state, the small metrics ring, the SSM hidden state).
+        xs = {"r_vpn": r_vpn, "r_cci": r_cci}
+        if pred_source == "replay":
+            xs["extras_v"], xs["extras_c"] = extras_cols
+            if obs:
+                xs["pred_t"] = pred_cols
+        if pred_source == "live":
+            xs["d_row"] = d_row
+        if obs:
+            xs.update(vpn_t=vpn_t, cci_t=cci_t, d_pair=d_pair,
+                      d_row_obs=d_row, month_cum=month_cum)
+
+        def body(carry, x):
+            fsm, ssm_h, ring, pred_live = carry
+            pred_t = None
+            if pred_source is None:
+                extras = None
+            elif pred_source == "replay":
+                extras = (x["extras_v"], x["extras_c"])
+                pred_t = x.get("pred_t")
+            else:
+                pred_t = pred_live
+                extras = predicted_mode_costs(pred_t, policy.cost_coef, f)
+            fsm, (x_t, state_t) = jax.vmap(
+                lambda p, c, w, e: p.step(c, w, e)
+            )(policy, fsm, (x["r_vpn"], x["r_cci"]), extras)
+            ys_t = (x_t.astype(f), state_t.astype(f))
+            if pred_source == "live":
+                from repro.models.ssm import demand_forecaster_step
+
+                u_t = jnp.log1p((x["d_row"] / fc["scale"]).astype(jnp.float32))
+                ssm_h, y_t = demand_forecaster_step(fc["params"], ssm_h, u_t)
+                pred_live = (
+                    jnp.maximum(jnp.expm1(y_t.astype(f)), 0.0) * fc["scale"]
+                )
+                ys_t = ys_t + (pred_live,)
+            if obs:
+                ring = update_ring(
+                    ring, hist_edges,
+                    x_t=x_t, state_t=state_t, vpn_t=x["vpn_t"],
+                    cci_t=x["cci_t"], d_pair=x["d_pair"],
+                    d_row=x["d_row_obs"], month_cum=x["month_cum"],
+                    tier_bounds=arrays.tier_bounds,
+                    routing_idx=routing_idx if topology else None,
+                    pred_t=pred_t,
+                )
+            return (fsm, ssm_h, ring, pred_live), ys_t
+
+        (fsm, ssm_h, ring, pred_live), ys_t = jax.lax.scan(
+            body, (fsm, ssm_h, ring, pred_live), xs, length=K
+        )
+
+        # --- commit + assemble --------------------------------------------
+        # Ring writes are the HOST's job (its replay loop updates the numpy
+        # ring twins); the device carry is the small vectors only.
+        seq_out = (dcum, dcum_month, vpn_pref, cci_pref, pred_live)
+        # Per-hour outputs ship home as separate (K, rows) planes riding
+        # the one result tuple, in the per-tick po order with the window
+        # sums appended. Concatenating them into a single (K, W) block
+        # would cost XLA:CPU a full extra read+write of every plane
+        # (~12MB/chunk) for zero host benefit — np.asarray of each CPU
+        # output buffer is already zero-copy.
+        planes = (ys_t[0], ys_t[1], vpn_t, cci_t, d_pair)
+        if pred_source == "live":
+            planes = planes + (ys_t[2],)
+        # The prefix snapshots ride home too: they ARE the host replay
+        # (snap[k] = prefix before hour t+k, the ring-write values), so the
+        # host adopts them instead of re-accumulating K columns itself.
+        planes = planes + (r_vpn, r_cci, snap_v, snap_c)
+        drain_vec = None
+        if obs and drain:
+            drain_vec = flatten_ring(ring)
+            ring = reset_ring(ring)
+        return fsm, ssm_h, t0 + K, ring, seq_out, planes, drain_vec
+
+    return step_many
 
 
 @dataclasses.dataclass(frozen=True)
@@ -553,6 +816,43 @@ class FleetRuntime:
                 self.obs.note_compile()
         return fn
 
+    def _step_many_fn(self, endo: bool, drain: bool, K: int):
+        key = (
+            "many", self.topology, self.pred_source, endo,
+            self.obs is not None, drain, K,
+        )
+        fn = _STEP_CACHE.get(key)
+        if fn is None:
+            # Donate the seq carry (arg 10) — the caller always adopts the
+            # returned carry, so XLA reuses the buffers across chunks; the
+            # metrics ring (arg 7) is donated for the same reason as in the
+            # per-tick variant.
+            fn = _STEP_CACHE.setdefault(key, jax.jit(
+                _build_step_many(key[1], key[2], endo,
+                                 self.obs is not None, drain, K),
+                donate_argnums=(7, 10) if self.obs is not None else (10,),
+            ))
+            if self.obs is not None:
+                self.obs.note_compile()
+        return fn
+
+    def _device_seq(self):
+        """The device-resident twin of the host's sequential float64 block
+        (tier cums, window prefixes, live forecast), built lazily and kept
+        across chunks. The (M, Hbuf) window RINGS deliberately stay host-only
+        — the chunked step reads them through a host gather packed into the
+        H2D block (see :func:`_build_step_many`), so the device never pays
+        ring-sized memory traffic. Invalidated whenever the host copy
+        advances without the device (per-tick ``step()``, ``reset()``)."""
+        if self._dev_seq is None:
+            st = self._state
+            with enable_x64():
+                self._dev_seq = jax.device_put((
+                    st.dcum, st.dcum_month, st.vpn_pref, st.cci_pref,
+                    st.pred_live,
+                ))
+        return self._dev_seq
+
     def reset(self) -> None:
         """Rewind to tick 0 (fresh carry; operands and policy unchanged)."""
         with enable_x64():
@@ -585,11 +885,13 @@ class FleetRuntime:
             dcum_month=z(P),
             vpn_pref=z(M),
             cci_pref=z(M),
-            ring_vpn=z(M, self.hbuf),
-            ring_cci=z(M, self.hbuf),
+            ring_vpn=z(self.hbuf, M),
+            ring_cci=z(self.hbuf, M),
             pred_live=pred_live,
             metrics=metrics,
         )
+        self._dev_seq = None
+        self._hpm_dev = jnp.int32(self.hours_per_month)
 
     @property
     def t(self) -> int:
@@ -603,6 +905,7 @@ class FleetRuntime:
         hour's per-row decision/cost arrays; the FSM state that SERVES the
         hour is ``out["state"]`` (map it with :func:`modes`)."""
         t0 = time.perf_counter() if self.obs is not None else 0.0
+        self._dev_seq = None  # host accumulators advance without the device
         st = self._state
         t = st.t
         M, P = self.n_rows, self.n_demand_rows
@@ -612,8 +915,8 @@ class FleetRuntime:
             st.dcum_month[:] = st.dcum
         month_cum = st.dcum - st.dcum_month
         lo = np.maximum(0, t - self._h_np)
-        r_vpn = st.vpn_pref - st.ring_vpn[self._rows_idx, lo % self.hbuf]
-        r_cci = st.cci_pref - st.ring_cci[self._rows_idx, lo % self.hbuf]
+        r_vpn = st.vpn_pref - st.ring_vpn[lo % self.hbuf, self._rows_idx]
+        r_cci = st.cci_pref - st.ring_cci[lo % self.hbuf, self._rows_idx]
 
         d = np.asarray(demand_t, np.float64)
         assert d.shape == (P,), (d.shape, P)
@@ -645,8 +948,8 @@ class FleetRuntime:
         # Commit this tick: ring slots take pref[t] BEFORE the prefixes
         # absorb this hour's costs (the exclusive-prefix convention).
         slot = t % self.hbuf
-        st.ring_vpn[:, slot] = st.vpn_pref
-        st.ring_cci[:, slot] = st.cci_pref
+        st.ring_vpn[slot] = st.vpn_pref
+        st.ring_cci[slot] = st.cci_pref
         np.add(st.vpn_pref, vpn_t, out=st.vpn_pref)
         np.add(st.cci_pref, cci_t, out=st.cci_pref)
         np.add(st.dcum, d_pair, out=st.dcum)
@@ -676,6 +979,160 @@ class FleetRuntime:
             )
             if drain:
                 self.obs.record_drain(t + 1, po[base:])
+        return out
+
+    def step_many(
+        self, demand_block, *, cci_demand_block=None
+    ) -> Dict[str, np.ndarray]:
+        """Advance K hours in ONE jitted ``lax.scan`` dispatch.
+
+        ``demand_block`` is ``(rows, K)`` — the next K columns of the same
+        (rows, T) matrix :meth:`run` takes; ``cci_demand_block`` optionally
+        prices the CCI counterfactual on its own ``(rows, K)`` volume
+        (endogenous demand, as in :meth:`step`). Returns :meth:`step`'s
+        dict with ``(rows, K)`` stacked arrays (the :meth:`run` layout).
+
+        Contract: ``step_many`` over any chunking of a demand stream is
+        BIT-EXACT vs per-tick :meth:`step` — decisions, window sums, and
+        the host float64 billing prefixes (``step_many(K=1)`` ≡ ``step()``
+        exactly). Inside a chunk the carry runs on device in the same
+        sequential order (see :func:`_build_step_many`); at chunk
+        boundaries the host accumulators are re-synchronized by replaying
+        the K returned cost columns through the same numpy adds, so
+        per-tick and chunked stepping interleave freely and
+        :meth:`reroute` at a chunk boundary behaves exactly as it does
+        between two ``step()`` calls. With observability on, the drain
+        cadence must not fall strictly inside a chunk (pick K dividing the
+        cadence, or break the stream at the boundary): drains then fire at
+        the same hours with bit-identical windows, riding the chunk's
+        packed D2H transfer.
+        """
+        t0 = time.perf_counter() if self.obs is not None else 0.0
+        st = self._state
+        t = st.t
+        M, P = self.n_rows, self.n_demand_rows
+        d = np.asarray(demand_block, np.float64)
+        assert d.ndim == 2 and d.shape[0] == P, (
+            f"demand_block must be (rows, K) = ({P}, K), got {d.shape}"
+        )
+        K = d.shape[1]
+        assert K >= 1, K
+        endo = cci_demand_block is not None
+        # Pre-chunk window reads, gathered from the HOST ring twins and
+        # packed into the chunk's single H2D block (see _build_step_many —
+        # the device never holds the rings). In-chunk positions (lo >= t)
+        # gather stale slots here; the device replaces them from its
+        # prefix-scan snapshots.
+        # Flat indices into the hour-major (hbuf, M) ring: slot*M + row. One
+        # per-row base ((t - h) % hbuf)*M + row, then each later hour is a
+        # broadcast +M with a single wrap fixup (slots advance together).
+        # Hours with t+k >= hbuf*? only matter while k < h[m] <= hbuf-1, so
+        # one subtract covers every live wrap.
+        Kw = min(K, self.hbuf)
+        flat = ((t - self._h_np) % self.hbuf) * M + self._rows_idx   # (M,)
+        flat = flat[None, :] + (np.arange(Kw) * M)[:, None]          # (Kw, M)
+        np.subtract(flat, self.hbuf * M, out=flat,
+                    where=flat >= self.hbuf * M)
+        if t < self.hbuf:   # early stream: hours before 0 clip to slot 0
+            flat = np.where(
+                (t + np.arange(Kw))[:, None] < self._h_np[None, :],
+                self._rows_idx[None, :], flat,
+            )
+        # One flat H2D buffer, every segment written contiguously: the
+        # demand matrix ravels in its native (rows, K) order (the device
+        # transposes it where it fuses anyway) and the ring gathers land
+        # straight in place — no transposed copies, no concatenate.
+        nd = (2 if endo else 1) * K * P
+        block = np.empty(nd + 2 * K * M)
+        block[:K * P] = d.ravel()
+        if endo:
+            c = np.asarray(cci_demand_block, np.float64)
+            assert c.shape == d.shape, (c.shape, d.shape)
+            block[K * P:nd] = c.ravel()
+        np.take(st.ring_vpn.reshape(-1), flat,
+                out=block[nd:nd + Kw * M].reshape(Kw, M))
+        np.take(st.ring_cci.reshape(-1), flat,
+                out=block[nd + K * M:nd + (K + Kw) * M].reshape(Kw, M))
+        if K > Kw:
+            # k >= hbuf is always in-chunk (h <= hbuf-1): the device
+            # replaces these from its snapshots, so any value works.
+            block[nd + Kw * M:nd + K * M] = 0.0
+            block[nd + (K + Kw) * M:] = 0.0
+        drain = False
+        if self.obs is not None:
+            cadence = self.obs.cadence
+            boundary = ((t // cadence) + 1) * cadence   # first drain > t
+            assert boundary >= t + K, (
+                f"obs drain cadence {cadence} falls mid-chunk (hour "
+                f"{boundary} inside ({t}, {t + K})): chunk ends must align "
+                f"with the drain cadence — pick K dividing the cadence, or "
+                f"step() across the boundary"
+            )
+            drain = boundary == t + K
+        fn = self._step_many_fn(endo, drain, K)
+        with enable_x64():
+            fsm, ssm_h, t_dev, ring, seq, planes, drain_vec = fn(
+                self.arrays, self.policy, self._fc, st.fsm, st.ssm_h,
+                st.t_dev, st.routing_idx, st.metrics, self._obs_edges,
+                self._hpm_dev, self._device_seq(), jax.device_put(block),
+            )
+        self._dev_seq = seq
+        it = iter(planes)                               # (K, rows) each
+        x = np.asarray(next(it)).astype(np.int64)
+        state = np.asarray(next(it)).astype(np.int64)
+        vpn_t = np.asarray(next(it))
+        cci_t = np.asarray(next(it))
+        d_pair = np.asarray(next(it))
+        if self.pred_source == "live":
+            pred_block = np.asarray(next(it))
+        r_vpn = np.asarray(next(it))
+        r_cci = np.asarray(next(it))
+        snap_v = np.asarray(next(it))
+        snap_c = np.asarray(next(it))
+
+        # Re-synchronize the host accumulators from the device's sequential
+        # scans — bit-identical f64 twins of the per-tick numpy adds (the
+        # calendar and prefix scans perform the same adds in the same
+        # order), so adopting them IS the replay. ``snap[k]`` is the prefix
+        # BEFORE hour t+k (the ring-snapshot / exclusive-prefix
+        # convention); the seq carry holds the post-chunk accumulators.
+        tks = t + np.arange(K)
+        w = min(K, self.hbuf)  # K > hbuf: earlier slots would be rewritten
+        st.ring_vpn[tks[K - w:] % self.hbuf] = snap_v[K - w:K]
+        st.ring_cci[tks[K - w:] % self.hbuf] = snap_c[K - w:K]
+        dcum_d, dcum_month_d, vpn_pref_d, cci_pref_d, _ = seq
+        st.vpn_pref[:] = np.asarray(vpn_pref_d)
+        st.cci_pref[:] = np.asarray(cci_pref_d)
+        st.dcum[:] = np.asarray(dcum_d)
+        st.dcum_month[:] = np.asarray(dcum_month_d)
+        self._state = st._replace(
+            t=t + K, fsm=fsm, ssm_h=ssm_h, t_dev=t_dev,
+            pred_live=(
+                pred_block[-1].copy() if self.pred_source == "live"
+                else st.pred_live
+            ),
+            metrics=ring,
+        )
+        out = {
+            "x": x.T,                      # (rows, K) — run()'s stacked layout
+            "state": state.T,
+            "r_vpn": r_vpn.T,
+            "r_cci": r_cci.T,
+            "vpn_cost": vpn_t.T,
+            "cci_cost": cci_t.T,
+            "cost": np.where(x == 1, cci_t, vpn_t).T,
+        }
+        if self.obs is not None:
+            self.obs.record_chunk(
+                t,
+                [{f: v[:, k] for f, v in out.items()} for k in range(K)],
+                d_pair=d_pair, demand=d, endo=endo,
+                h2d_bytes=block.nbytes,
+                d2h_bytes=sum(p.nbytes for p in planes),
+                dt_s=time.perf_counter() - t0,
+            )
+            if drain:
+                self.obs.record_drain(t + K, np.asarray(drain_vec))
         return out
 
     def run(self, demand, *, cci_demand=None) -> Dict[str, np.ndarray]:

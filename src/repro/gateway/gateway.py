@@ -46,6 +46,7 @@ from repro.core.planner import collective_mode
 from repro.fleet.runtime import (
     RuntimeConfig,
     _build_step,
+    _build_step_many,
     resolve_runtime_operands,
 )
 from repro.obs.metrics import (
@@ -187,17 +188,38 @@ class _Bucket:
         self.h_np = np.ones((n_slots, m), np.int64)
         self.dcum, self.dcum_month = z(p), z(p)
         self.vpn_pref, self.cci_pref = z(m), z(m)
-        self.ring_vpn, self.ring_cci = z(m, hb), z(m, hb)
+        self.ring_vpn, self.ring_cci = z(hb, m), z(hb, m)  # hour-major
         self.bill_real, self.bill_vpn, self.bill_cci = z(m), z(m), z(m)
         self.gb = z(p)
         self.demand = np.zeros((n_slots, p, 1), np.float64)
         self.routing_idx_np = np.zeros((n_slots, p), np.int64)
         self.slots: List[Optional[str]] = [None] * n_slots
         self.free: List[int] = list(range(n_slots))[::-1]
+        # Device-resident twin of the host float64 sequential block, used by
+        # the chunked mega-tick (tick_many) and kept across chunks;
+        # invalidated whenever the host copy moves without the device
+        # (slot writes, per-tick ticks).
+        self._dev_seq = None
 
     @property
     def occupied(self) -> int:
         return self.n_slots - len(self.free)
+
+    def device_seq(self):
+        # The (slots, Hbuf, M) window rings stay host-only — the chunked
+        # mega-tick reads them through a host gather packed into the H2D
+        # block (see repro.fleet.runtime._build_step_many).
+        if self._dev_seq is None:
+            with enable_x64():
+                self._dev_seq = (
+                    jnp.asarray(self.hpm, jnp.int32),
+                    jax.device_put((
+                        self.dcum, self.dcum_month, self.vpn_pref,
+                        self.cci_pref,
+                        np.zeros(self.vpn_pref.shape, np.float64),  # pred_live
+                    )),
+                )
+        return self._dev_seq
 
     def ensure_T(self, T: int) -> None:
         cur = self.demand.shape[2]
@@ -236,6 +258,7 @@ class _Bucket:
         if packed.routing_idx is not None:
             self.routing_idx_np[s] = packed.routing_idx
         self.slots[s] = name
+        self._dev_seq = None
 
     def clear_slot(self, s: int) -> None:
         with enable_x64():
@@ -244,6 +267,7 @@ class _Bucket:
         self.demand[s] = 0.0
         self.slots[s] = None
         self.free.append(s)
+        self._dev_seq = None
 
 
 class FleetGateway:
@@ -425,9 +449,9 @@ class FleetGateway:
         np.copyto(b.dcum_month, b.dcum, where=boundary[:, None])
         month_cum = b.dcum - b.dcum_month
         lo = np.maximum(0, b.t[:, None] - b.h_np)
-        idx = (lo % key.hbuf_cap)[..., None]
-        r_vpn = b.vpn_pref - np.take_along_axis(b.ring_vpn, idx, axis=2)[..., 0]
-        r_cci = b.cci_pref - np.take_along_axis(b.ring_cci, idx, axis=2)[..., 0]
+        idx = (lo % key.hbuf_cap)[:, None, :]
+        r_vpn = b.vpn_pref - np.take_along_axis(b.ring_vpn, idx, axis=1)[:, 0]
+        r_cci = b.cci_pref - np.take_along_axis(b.ring_cci, idx, axis=1)[:, 0]
         col = np.minimum(b.t, b.demand.shape[2] - 1)
         d_t = np.take_along_axis(
             b.demand, col[:, None, None], axis=2
@@ -453,8 +477,8 @@ class FleetGateway:
         # hour (the exclusive-prefix convention), then billing accumulates
         # (dead slots are alive-masked upstream, so they add exact zeros).
         slot_col = (b.t % key.hbuf_cap)[:, None, None]
-        np.put_along_axis(b.ring_vpn, slot_col, b.vpn_pref[..., None], axis=2)
-        np.put_along_axis(b.ring_cci, slot_col, b.cci_pref[..., None], axis=2)
+        np.put_along_axis(b.ring_vpn, slot_col, b.vpn_pref[:, None, :], axis=1)
+        np.put_along_axis(b.ring_cci, slot_col, b.cci_pref[:, None, :], axis=1)
         b.vpn_pref += vpn_t
         b.cci_pref += cci_t
         b.dcum += d_pair
@@ -485,6 +509,212 @@ class FleetGateway:
             if b.t[s] + 1 >= b.horizon[s]:
                 finished.append(name)
         b.t += 1
+        b._dev_seq = None  # host accumulators advanced without the device
+
+    # --- the chunked mega-tick (tick_many) ---------------------------------
+
+    def _mega_many_fn(self, key: BucketKey, n_slots: int, drain: bool, K: int):
+        ck = key.compile_key(
+            n_slots=n_slots, obs=self._obs, drain=drain, chunk=K
+        )
+        fn = self._compiled.get(ck)
+        if fn is None:
+            chunk = _build_step_many(
+                key.topology, key.pred_source, False, self._obs, drain, K
+            )
+            edges = self._edges
+
+            def mega(arrays, policy, fsm, ssm_h, t, routing_idx, ring,
+                     alive, hpm, seq, blocks):
+                def one(a, q, f, s, tt, ri, rg, hp, sq, bk):
+                    return chunk(a, q, None, f, s, tt, ri, rg, edges,
+                                 hp, sq, bk)
+
+                fsm, ssm_h, t1, ring, seq, ys, dv = jax.vmap(one)(
+                    arrays, policy, fsm, ssm_h, t, routing_idx, ring,
+                    hpm, seq, blocks
+                )
+                # Alive-bitmap mask over each (n_slots, K, rows) plane.
+                ys = tuple(p * alive[:, None, None] for p in ys)
+                return fsm, ssm_h, t1, ring, seq, ys, dv
+
+            fn = jax.jit(
+                mega, donate_argnums=(6, 9) if self._obs else (9,)
+            )
+            self._compiled[ck] = fn
+            self.compiles += 1
+        return fn
+
+    def tick_many(
+        self, K: int, *, collect: bool = True
+    ) -> Dict[str, Dict[str, np.ndarray]]:
+        """Advance EVERY active tenant K hours — one chunked dispatch per
+        non-empty bucket (the :meth:`repro.fleet.runtime.FleetRuntime.step_many`
+        scan, vmapped over pool slots). Decisions and host float64 billing
+        are bit-exact vs K sequential :meth:`tick` calls; per-tenant outputs
+        come back stacked ``(rows, K)`` when ``collect``.
+
+        Chunk-boundary semantics: lifecycle resolves at chunk ends — queued
+        joins admit after the chunk, and every active tenant must have at
+        least K hours of horizon left (asserted; finish a ragged tail with
+        smaller chunks or per-tick :meth:`tick`). With obs on, the drain
+        cadence must not fall strictly inside the chunk (pick K dividing
+        the cadence); drains then fire at the same hours as per-tick
+        stepping with bit-identical windows.
+        """
+        K = int(K)
+        assert K >= 1, K
+        hour = self.hours
+        drain = False
+        if self._obs:
+            boundary = ((hour // self.cadence) + 1) * self.cadence
+            assert boundary >= hour + K, (
+                f"gateway drain cadence {self.cadence} falls mid-chunk "
+                f"(hour {boundary} inside ({hour}, {hour + K})): pick K "
+                f"dividing the cadence, or tick() across the boundary"
+            )
+            drain = boundary == hour + K
+        outs: Dict[str, Dict[str, np.ndarray]] = {}
+        finished: List[str] = []
+        for key, buckets in self._buckets.items():
+            for b in buckets:
+                if b.occupied == 0:
+                    continue
+                remaining = b.horizon[b.alive] - b.t[b.alive]
+                assert int(remaining.min()) >= K, (
+                    f"tick_many({K}) would overrun a tenant's horizon "
+                    f"(min remaining {int(remaining.min())}h): chunk the "
+                    f"tail with a smaller K or finish it with tick()"
+                )
+                self._tick_bucket_many(key, b, K, drain, collect, outs,
+                                       finished)
+        self.hours = hour + K
+        for name in finished:
+            self._finish(name, "done")
+        self._drain_admission_queue()
+        return outs
+
+    def _tick_bucket_many(self, key, b, K, drain, collect, outs,
+                          finished) -> None:
+        M, P = key.rows_cap, key.pairs_cap
+        hb = key.hbuf_cap
+        cols = np.minimum(
+            b.t[:, None] + np.arange(K)[None, :], b.demand.shape[2] - 1
+        )
+        demand_cols = np.take_along_axis(
+            b.demand, cols[:, None, :], axis=2
+        )                                                # (n_slots, P, K)
+        # Pre-chunk window reads from the HOST ring twins, packed into the
+        # same flat H2D block the standalone runtime uses (the device never
+        # holds the rings; in-chunk positions are replaced on device from
+        # its prefix-scan snapshots). Flat per-slot indices into the
+        # hour-major (hb, M) ring: slot*M + row, one wrap fixup (per-slot
+        # clocks differ, so the early-stream clip applies per slot).
+        Kw = min(K, hb)
+        rows = np.arange(M)
+        flat = ((b.t[:, None] - b.h_np) % hb) * M + rows[None, :]
+        flat = (
+            flat[:, None, :] + (np.arange(Kw) * M)[None, :, None]
+        )                                                # (n_slots, Kw, M)
+        np.subtract(flat, hb * M, out=flat, where=flat >= hb * M)
+        early = (
+            b.t[:, None, None] + np.arange(Kw)[None, :, None]
+        ) < b.h_np[:, None, :]
+        flat = np.where(early, rows[None, None, :], flat)
+        pre_v = np.take_along_axis(
+            b.ring_vpn.reshape(b.n_slots, -1),
+            flat.reshape(b.n_slots, -1), axis=1,
+        )
+        pre_c = np.take_along_axis(
+            b.ring_cci.reshape(b.n_slots, -1),
+            flat.reshape(b.n_slots, -1), axis=1,
+        )
+        nd = K * P
+        blocks = np.zeros((b.n_slots, nd + 2 * K * M))
+        blocks[:, :nd] = demand_cols.reshape(b.n_slots, nd)
+        blocks[:, nd:nd + Kw * M] = pre_v
+        blocks[:, nd + K * M:nd + (K + Kw) * M] = pre_c
+        blocks *= b.alive[:, None]
+
+        fn = self._mega_many_fn(key, b.n_slots, drain, K)
+        hpm_dev, seq = b.device_seq()
+        with enable_x64():
+            b.fsm, b.ssm_h, b.t_dev, b.ring, seq, ys, dv = fn(
+                b.arrays, b.policy, b.fsm, b.ssm_h, b.t_dev,
+                b.routing_idx, b.ring, b.alive_dev, hpm_dev, seq,
+                jax.device_put(blocks),
+            )
+        b._dev_seq = (hpm_dev, seq)
+        it = iter(ys)                                    # (n_slots, K, rows)
+        nxt = lambda: np.asarray(next(it))
+        x, state, vpn_t, cci_t, d_pair = nxt(), nxt(), nxt(), nxt(), nxt()
+        if key.pred_source == "live":
+            next(it)   # pred plane — the SSM carry rides the device seq
+        r_vpn, r_cci = nxt(), nxt()
+        snap_v, snap_c = nxt(), nxt()                    # prefix BEFORE t+k
+
+        # Replay the K commits through the host accumulators.
+        # np.add.accumulate is a strictly sequential left fold, so seeding
+        # it with the carried value reproduces per-tick stepping's add order
+        # TO THE BIT (billing in particular must accumulate hour by hour,
+        # never via a pairwise-summed block): ``acc[:, k]`` is the value
+        # BEFORE hour t+k (the ring snapshot / exclusive-prefix convention),
+        # ``acc[:, K]`` the final carry.
+        seeded = lambda carry, cols: np.add.accumulate(
+            np.concatenate([carry[:, None], cols], axis=1), axis=1
+        )
+        acc_v = seeded(b.vpn_pref, vpn_t)
+        acc_c = seeded(b.cci_pref, cci_t)
+        acc_d = seeded(b.dcum, d_pair)
+        tks = b.t[:, None] + np.arange(K)[None, :]       # (n_slots, K)
+        w = min(K, key.hbuf_cap)  # K > hbuf: early slots would be rewritten
+        wslots = (tks[:, K - w:] % key.hbuf_cap)[:, :, None]
+        # The device prefix snapshots ARE the ring values (snap[k] ==
+        # acc[:, k] bit-for-bit: same sequential f64 adds in the same
+        # order; dead slots are zero both ways).
+        np.put_along_axis(b.ring_vpn, wslots, snap_v[:, K - w:K], axis=1)
+        np.put_along_axis(b.ring_cci, wslots, snap_c[:, K - w:K], axis=1)
+        b.vpn_pref[...] = acc_v[:, K]
+        b.cci_pref[...] = acc_c[:, K]
+        b.dcum[...] = acc_d[:, K]
+        boundary = tks % b.hpm[:, None] == 0             # (n_slots, K)
+        has = boundary.any(axis=1) & b.alive
+        last = K - 1 - np.argmax(boundary[:, ::-1], axis=1)
+        np.copyto(
+            b.dcum_month,
+            np.take_along_axis(acc_d, last[:, None, None], axis=1)[:, 0],
+            where=has[:, None],
+        )
+        b.bill_real[...] = seeded(
+            b.bill_real, np.where(x == 1.0, cci_t, vpn_t)
+        )[:, K]
+        b.bill_vpn[...] = seeded(b.bill_vpn, vpn_t)[:, K]
+        b.bill_cci[...] = seeded(b.bill_cci, cci_t)[:, K]
+        b.gb[...] = seeded(b.gb, d_pair)[:, K]
+
+        vecs = np.asarray(dv) if drain else None
+        for s, name in enumerate(b.slots):
+            if name is None:
+                continue
+            m = int(b.m[s])
+            if collect:
+                xs = x[s, :, :m].astype(np.int64).T      # (m, K) stacked
+                outs[name] = {
+                    "x": xs,
+                    "state": state[s, :, :m].astype(np.int64).T,
+                    "r_vpn": r_vpn[s, :, :m].T,
+                    "r_cci": r_cci[s, :, :m].T,
+                    "vpn_cost": vpn_t[s, :, :m].T,
+                    "cci_cost": cci_t[s, :, :m].T,
+                    "cost": np.where(
+                        xs == 1, cci_t[s, :, :m].T, vpn_t[s, :, :m].T
+                    ),
+                }
+            if drain:
+                self._drain_slot(name, b, s, vecs[s].copy(), int(b.t[s]) + K)
+            if b.t[s] + K >= b.horizon[s]:
+                finished.append(name)
+        b.t += K
 
     # --- metrics / SLO -----------------------------------------------------
 

@@ -91,11 +91,16 @@ class BucketKey(NamedTuple):
     pred_cap: int        # replay pred_demand column capacity (0 when unused)
     hbuf_cap: int        # host prefix-ring depth (pow2)
 
-    def compile_key(self, *, n_slots: int, obs: bool, drain: bool) -> tuple:
+    def compile_key(
+        self, *, n_slots: int, obs: bool, drain: bool,
+        chunk: Optional[int] = None,
+    ) -> tuple:
+        # ``chunk`` is the static K of a chunked mega-tick (tick_many);
+        # ``None`` is the per-tick variant — distinct compiled programs.
         return (
             self.topology, self.rows_cap, self.pairs_cap, self.n_tiers,
             self.policy_treedef, self.pred_source, self.pred_cap,
-            n_slots, obs, drain,
+            n_slots, obs, drain, chunk,
         )
 
 

@@ -160,3 +160,14 @@ def tiered_cost(month_cum, demand, bounds, rates):
     b = jnp.asarray([x if np.isfinite(x) else 1e30 for x in bounds], jnp.float32)
     r = jnp.asarray(list(rates), jnp.float32)
     return ref.tiered_cost(month_cum, demand, b, r)
+
+
+def tiered_cost_scan(cum0, demand, bounds, rates, reset):
+    """Chunked K-hour tiered pricing; returns ``(costs (N, K), cum_out (N,))``."""
+    N = demand.shape[0]
+    usable = _interpret_forced() or _on_tpu()
+    if usable and N % 8 == 0:
+        return _tc.tiered_cost_scan(
+            cum0, demand, bounds, rates, reset, interpret=not _on_tpu()
+        )
+    return _tc.tiered_cost_scan_ref(cum0, demand, bounds, rates, reset)

@@ -128,3 +128,115 @@ def tiered_cost_batched_ref(
     from repro.core.costmodel import tiered_marginal_cost_tables
 
     return tiered_marginal_cost_tables(month_cum, demand, bounds, rates)
+
+
+# ---------------------------------------------------------------------------
+# Chunked streaming path — K hours per link with the tier carry in VMEM
+# ---------------------------------------------------------------------------
+
+
+def _tiered_scan_kernel(
+    cum_ref, d_ref, bounds_ref, rates_ref, reset_ref, o_ref, cum_out_ref
+):
+    K = d_ref.shape[1]
+    bounds = bounds_ref[...].astype(jnp.float32)     # (block_n, Kt)
+    rates = rates_ref[...].astype(jnp.float32)
+    Kt = bounds.shape[-1]
+    prev = jnp.concatenate(
+        [jnp.zeros((bounds.shape[0], 1), jnp.float32), bounds[:, : Kt - 1]], -1
+    )
+
+    def body(k, cum):
+        # ``cum`` is the month-to-date volume carried ACROSS the K inner
+        # hours — it lives in VMEM/registers for the whole chunk; only the
+        # K cost columns and the final carry ever leave the tile.
+        cum = jnp.where(reset_ref[0, k] != 0, 0.0, cum)   # month boundary
+        hi = cum + d_ref[:, pl.dslice(k, 1)].astype(jnp.float32)
+        seg = jnp.clip(
+            jnp.minimum(hi, bounds) - jnp.maximum(cum, prev), 0.0
+        )                                                 # (block_n, Kt)
+        o_ref[:, pl.dslice(k, 1)] = jnp.sum(
+            seg * rates, axis=-1, keepdims=True
+        )
+        return hi
+
+    cum_out_ref[...] = jax.lax.fori_loop(
+        0, K, body, cum_ref[...].astype(jnp.float32)
+    )
+
+
+def tiered_cost_scan(
+    cum0: jax.Array,             # (N,) month-to-date volume at chunk start
+    demand: jax.Array,           # (N, K) billed volume per inner hour
+    bounds: jax.Array,           # (N, Kt) padded per-link tier bounds (finite)
+    rates: jax.Array,            # (N, Kt) per-link marginal rates (0 padding)
+    reset: jax.Array,            # (K,) int/bool — hour k starts a new month
+    *,
+    block_n: int = 8,
+    interpret: bool = False,
+):
+    """K-hour chunked tiered pricing with the tier carry resident in VMEM.
+
+    The fused-chunk twin of :func:`tiered_cost_batched` for the streaming
+    runtime's ``step_many`` path: instead of taking precomputed monthly
+    prefix sums per hour, each grid tile carries the month-to-date volume
+    through a ``fori_loop`` over the chunk's K inner hours (zeroed where
+    ``reset`` marks a billing-month boundary), so on a TPU the tier state
+    never leaves the device — or even VMEM — between chunk boundaries.
+    Returns ``(costs (N, K) f32, cum_out (N,) f32)``; feeding ``cum_out``
+    back as the next chunk's ``cum0`` chains chunks exactly.
+
+    f32 like the other Pallas kernels — this is the TPU throughput path;
+    the runtime's jitted scan keeps XLA float64 pricing as the
+    bit-exactness path (``tests/test_kernels.py`` sweeps this kernel
+    against :func:`tiered_cost_scan_ref` in CPU interpret mode).
+    """
+    N, K = demand.shape
+    Kt = bounds.shape[-1]
+    assert cum0.shape == (N,) and bounds.shape == rates.shape == (N, Kt)
+    assert reset.shape == (K,), (reset.shape, K)
+    assert N % block_n == 0, (N, block_n)
+    costs, cum_out = pl.pallas_call(
+        _tiered_scan_kernel,
+        grid=(N // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, 1), lambda n: (n, 0)),
+            pl.BlockSpec((block_n, K), lambda n: (n, 0)),
+            pl.BlockSpec((block_n, Kt), lambda n: (n, 0)),
+            pl.BlockSpec((block_n, Kt), lambda n: (n, 0)),
+            pl.BlockSpec((1, K), lambda n: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, K), lambda n: (n, 0)),
+            pl.BlockSpec((block_n, 1), lambda n: (n, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, K), jnp.float32),
+            jax.ShapeDtypeStruct((N, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        cum0[:, None], demand, bounds, rates,
+        jnp.asarray(reset, jnp.int32)[None, :],
+    )
+    return costs, cum_out[:, 0]
+
+
+def tiered_cost_scan_ref(cum0, demand, bounds, rates, reset):
+    """Pure-XLA oracle for :func:`tiered_cost_scan`: a ``lax.scan`` over the
+    chunk's hour columns carrying the month-to-date volume (any float
+    dtype — the fleet runtime uses exactly this formulation in f64)."""
+    from repro.core.costmodel import tiered_marginal_cost_tables
+
+    def body(cum, dr):
+        d, rs = dr
+        cum = jnp.where(rs != 0, jnp.zeros_like(cum), cum)
+        cost = tiered_marginal_cost_tables(
+            cum[:, None], d[:, None], bounds, rates
+        )[:, 0]
+        return cum + d, cost
+
+    cum, costs = jax.lax.scan(
+        body, cum0, (demand.T, jnp.asarray(reset, jnp.int32))
+    )
+    return costs.T, cum

@@ -243,6 +243,41 @@ class FleetObserver:
         if self.divergence is not None:
             self.divergence.on_step(t, out, demand_t, endo)
 
+    def record_chunk(
+        self,
+        t: int,
+        outs_by_hour: Sequence[dict],
+        *,
+        d_pair: np.ndarray,
+        demand: np.ndarray,
+        endo: bool,
+        h2d_bytes: int,
+        d2h_bytes: int,
+        dt_s: float,
+    ) -> None:
+        """One ``step_many`` dispatch covering hours ``t .. t+K-1``.
+
+        ``outs_by_hour`` is the chunk's K per-hour step dicts, ``d_pair``
+        is (K, P) and ``demand`` (P, K). The profiler gets one per-chunk
+        record (latency amortized per hour, transfers counted once); every
+        per-hour consumer — trace, billing/regret/divergence monitors —
+        sees exactly the per-tick event stream, so a chunked run's traces
+        and monitor verdicts match a per-tick run's.
+        """
+        K = len(outs_by_hour)
+        self.hours = t + K
+        self.endo_seen |= endo
+        self.profiler.record_chunk(dt_s, h2d_bytes, d2h_bytes, K)
+        for k, out in enumerate(outs_by_hour):
+            if self.trace is not None:
+                self.trace.observe_states(t + k, out["state"])
+            if self.billing is not None:
+                self.billing.on_step(t + k, out, d_pair[k])
+            if self.regret is not None:
+                self.regret.on_step(t + k, out)
+            if self.divergence is not None:
+                self.divergence.on_step(t + k, out, demand[:, k], endo)
+
     def record_drain(self, hour: int, vec) -> None:
         dm = DrainedMetrics.from_flat(
             hour, vec,

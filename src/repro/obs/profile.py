@@ -22,11 +22,27 @@ class TickProfiler:
         self.d2h_bytes = 0
         self.drains = 0
         self.compiles = 0      # new jitted tick variants built while stepping
+        self.chunks = 0        # chunked step_many dispatches recorded
+        self.chunk_ticks = 0   # hours covered by those dispatches
 
     def record(self, dt_s: float, h2d_bytes: int, d2h_bytes: int) -> None:
         self.tick_s.append(float(dt_s))
         self.h2d_bytes += int(h2d_bytes)
         self.d2h_bytes += int(d2h_bytes)
+
+    def record_chunk(
+        self, dt_s: float, h2d_bytes: int, d2h_bytes: int, ticks: int
+    ) -> None:
+        """One chunked dispatch covering ``ticks`` hours: wall time is
+        attributed per covered hour (so tick percentiles stay comparable
+        across chunked and per-tick streams), transfer bytes count once —
+        the per-chunk packing IS what chunking amortizes."""
+        ticks = max(1, int(ticks))
+        self.tick_s.extend([float(dt_s) / ticks] * ticks)
+        self.h2d_bytes += int(h2d_bytes)
+        self.d2h_bytes += int(d2h_bytes)
+        self.chunks += 1
+        self.chunk_ticks += ticks
 
     def note_compile(self) -> None:
         self.compiles += 1
@@ -59,4 +75,6 @@ class TickProfiler:
             "d2h_bytes": self.d2h_bytes,
             "drains": self.drains,
             "compiles": self.compiles,
+            "chunks": self.chunks,
+            "chunk_ticks": self.chunk_ticks,
         }

@@ -359,6 +359,79 @@ def test_obs_on_off_decisions_bit_exact(seed):
         assert rep.hours == T and rep.violations == []
 
 
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=3, deadline=None)
+def test_step_many_chunking_bit_exact(seed):
+    """The chunked-stepping contract: ``step_many`` over any chunking of the
+    demand stream equals per-tick ``step()`` BIT-EXACTLY — decisions, window
+    sums, costs, and the carried billing prefixes — for all three policies,
+    K in {1, 7, 24}, across a reroute() at a chunk boundary, with obs off
+    and on (drain cadence a chunk multiple), and interleaved with a
+    per-tick ragged tail."""
+    from repro.obs import ObsConfig
+
+    rng = np.random.default_rng(seed)
+    sc = build_topology_scenario(
+        8, n_facilities=3, horizon=int(rng.integers(210, 300)), seed=seed
+    )
+    r0 = optimize_routing(sc.topo, sc.demand)
+    r1, moved = _alternative_routing(sc.topo, r0, rng)
+    T = sc.demand.shape[1]
+    s = 168  # chunk boundary for every K in {1, 7, 24} (168 = 7 * 24)
+    hpm = sc.topo.hours_per_month
+    with enable_x64():
+        arrays = sc.topo.stack(r0, jnp.float64)
+
+    fields = ("x", "state", "r_vpn", "r_cci", "vpn_cost", "cci_cost", "cost")
+    base = FleetRuntime(arrays, hours_per_month=hpm).run(sc.demand)
+    for pol in _policies_for(arrays, base, rng):
+        # Per-tick reference stream (reroute at hour s).
+        rt = FleetRuntime(arrays, policy=pol, hours_per_month=hpm)
+        ref = []
+        for t in range(T):
+            if moved and t == s:
+                rt.reroute(r1)
+            ref.append(rt.step(sc.demand[:, t]))
+        want = {f: np.stack([o[f] for o in ref], axis=1) for f in fields}
+        want_state = rt._state
+
+        for K in (1, 7, 24):
+            for obs in (None, ObsConfig(cadence=3 * K, divergence=True)):
+                rt2 = FleetRuntime(arrays, policy=pol,
+                                   hours_per_month=hpm, obs=obs)
+                outs, t = [], 0
+                while t + K <= T:
+                    if moved and t == s:
+                        rt2.reroute(r1)
+                    o = rt2.step_many(sc.demand[:, t:t + K])
+                    outs.append({f: o[f] for f in fields})
+                    t += K
+                while t < T:  # ragged tail: chunked and per-tick interleave
+                    if moved and t == s:
+                        rt2.reroute(r1)
+                    o = rt2.step(sc.demand[:, t])
+                    outs.append({f: np.asarray(o[f])[:, None]
+                                 for f in fields})
+                    t += 1
+                got = {f: np.concatenate([o[f] for o in outs], axis=1)
+                       for f in fields}
+                ctx = f"K={K} obs={'on' if obs else 'off'}"
+                for f in fields:
+                    np.testing.assert_array_equal(
+                        got[f], want[f], err_msg=f"{ctx}:{f}"
+                    )
+                # Carried billing prefixes resync identically at boundaries.
+                for f in ("vpn_pref", "cci_pref", "dcum", "dcum_month"):
+                    np.testing.assert_array_equal(
+                        getattr(rt2._state, f), getattr(want_state, f),
+                        err_msg=f"{ctx}:{f}",
+                    )
+                if obs is not None:
+                    rt2.obs_check(final=True)
+                    rep = rt2.obs_report()
+                    assert rep.hours == T and rep.violations == []
+
+
 def test_replay_single_segment_is_plan_topology():
     """A one-entry schedule must reproduce plan_topology bit-for-bit (the
     replay oracle degenerates to the offline planner)."""

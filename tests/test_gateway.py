@@ -158,6 +158,82 @@ def test_gateway_matches_standalone_bit_for_bit(seed):
     assert gw.check() == []
 
 
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=3, deadline=None)
+def test_tick_many_matches_per_tick_bit_for_bit(seed):
+    """The chunked mega-tick mirror of the standalone contract:
+    ``tick_many(K)`` equals K sequential ``tick()`` calls bit for bit for
+    every pooled tenant — stacked (rows, K) outputs, float64 billing
+    totals, a reroute() applied at a chunk boundary, and a per-tick ragged
+    tail interleaved after the chunks (drain cadence is a chunk multiple,
+    so drains fire at the same hours on both sides)."""
+    rng = np.random.default_rng(seed)
+    K = int(rng.integers(2, 9))
+    n_chunks = max(5, -(-28 // K))  # scenario builders need horizon >= 24
+    tail = int(rng.integers(1, 4))
+    T = K * n_chunks + tail
+
+    tenants = {}
+    for i, kind in enumerate(("reactive", "hysteresis", "forecast")):
+        name = f"t{i}-{kind}"
+        spec, _, sc = _topology_tenant(
+            int(rng.integers(3, 7)), T, seed + i, policy_kind=kind, rng=rng
+        )
+        tenants[name] = (spec, sc)
+    fsc = build_fleet_scenario(3, horizon=T, seed=seed)
+    tenants["fleet"] = (
+        TenantSpec(spec=fsc.fleet, demand=fsc.demand, config=RuntimeConfig()),
+        fsc,
+    )
+
+    gw_a = FleetGateway(GatewayConfig(slots_per_bucket=4, cadence=2 * K))
+    gw_b = FleetGateway(GatewayConfig(slots_per_bucket=4, cadence=2 * K))
+    for name, (spec, _) in tenants.items():
+        gw_a.join(name, spec)
+        gw_b.join(name, spec)
+
+    reroute_name = "t0-reactive"
+    _, rsc = tenants[reroute_name]
+    r1, moved = _alt_routing(
+        rsc.topo, optimize_routing(rsc.topo, rsc.demand), rng
+    )
+    s = 2 * K  # a chunk boundary on the chunked side
+
+    per_tick = {name: [] for name in tenants}
+    for t in range(T):
+        if t == s and moved:
+            gw_a.reroute(reroute_name, r1)
+        outs = gw_a.tick()
+        for name in tenants:
+            per_tick[name].append(outs[name])
+
+    t = 0
+    for _ in range(n_chunks):
+        if t == s and moved:
+            gw_b.reroute(reroute_name, r1)
+        outs = gw_b.tick_many(K)
+        for name in tenants:
+            for k in range(K):
+                got = {f: np.asarray(outs[name][f])[:, k]
+                       for f in STEP_FIELDS}
+                _assert_step_equal(
+                    got, per_tick[name][t + k], f"{name}@chunk-hour{t + k}"
+                )
+        t += K
+    while t < T:  # ragged tail: chunked and per-tick interleave freely
+        outs = gw_b.tick()
+        for name in tenants:
+            _assert_step_equal(outs[name], per_tick[name][t],
+                               f"{name}@tail-hour{t}")
+        t += 1
+
+    assert gw_b.hours == gw_a.hours == T
+    for name in tenants:
+        ba, bb = gw_a.billing(name), gw_b.billing(name)
+        assert ba == bb, (name, ba, bb)
+    assert gw_a.check() == [] and gw_b.check() == []
+
+
 def test_mega_tick_steps_256_heterogeneous_tenants_bit_exact():
     """The acceptance bar: ONE bucket, ONE jitted mega-tick, >= 256
     heterogeneous tenants (distinct prices/thresholds/demands), every

@@ -253,3 +253,68 @@ def test_tiered_cost_batched_matches_ref():
 
     want64 = tiered_marginal_cost_np(tiers[1], cum[1], d[1])
     np.testing.assert_allclose(np.asarray(out)[1], want64, atol=2e-2)
+
+
+@pytest.mark.parametrize("K", [1, 7, 24])
+def test_tiered_cost_scan_matches_ref(K):
+    """Chunked K-hour kernel: VMEM tier carry vs the lax.scan oracle."""
+    from repro.kernels.tiered_cost import (
+        tiered_cost_batched_ref,
+        tiered_cost_scan,
+        tiered_cost_scan_ref,
+    )
+
+    rng = np.random.default_rng(11)
+    N, Kt = 16, 4
+    cum0 = jnp.asarray(rng.uniform(0, 5e4, N), jnp.float32)
+    d = jnp.asarray(rng.uniform(0, 200, (N, K)), jnp.float32)
+    b = np.sort(rng.uniform(1e3, 2e5, (N, Kt)), axis=1)
+    b[:, -1] = 1e30
+    bounds = jnp.asarray(b, jnp.float32)
+    rates = jnp.asarray(rng.uniform(0.01, 0.2, (N, Kt)), jnp.float32)
+    reset = np.zeros(K, np.int32)
+    reset[K // 2] = 1  # billing-month boundary inside the chunk
+    reset = jnp.asarray(reset)
+
+    out, cum_out = tiered_cost_scan(cum0, d, bounds, rates, reset, interpret=True)
+    want, cum_want = tiered_cost_scan_ref(cum0, d, bounds, rates, reset)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(cum_out), np.asarray(cum_want), rtol=1e-6)
+
+    # Chaining two half-chunks reproduces the full chunk bit-for-bit.
+    if K > 1:
+        h = K // 2
+        cA, cumA = tiered_cost_scan(cum0, d[:, :h], bounds, rates, reset[:h], interpret=True)
+        cB, _ = tiered_cost_scan(cumA, d[:, h:], bounds, rates, reset[h:], interpret=True)
+        np.testing.assert_array_equal(
+            np.concatenate([np.asarray(cA), np.asarray(cB)], axis=1), np.asarray(out)
+        )
+
+    # With no resets, the scan path equals the prefix-sum batched oracle.
+    zero = jnp.zeros(K, jnp.int32)
+    out0, _ = tiered_cost_scan(cum0, d, bounds, rates, zero, interpret=True)
+    pref = cum0[:, None] + jnp.concatenate(
+        [jnp.zeros((N, 1), jnp.float32), jnp.cumsum(d, axis=1)[:, :-1]], axis=1
+    )
+    want0 = tiered_cost_batched_ref(pref, d, bounds, rates)
+    # Looser: the batched oracle's f32 cumsum reassociates the prefix adds.
+    np.testing.assert_allclose(np.asarray(out0), np.asarray(want0), rtol=1e-4, atol=1e-3)
+
+
+def test_ops_tiered_cost_scan_dispatch():
+    """ops wrapper falls back to the XLA twin when N is not tile-aligned."""
+    from repro.kernels.tiered_cost import tiered_cost_scan_ref
+
+    rng = np.random.default_rng(12)
+    N, K, Kt = 5, 6, 3  # N % 8 != 0 -> ref path off-TPU
+    cum0 = jnp.asarray(rng.uniform(0, 100, N), jnp.float32)
+    d = jnp.asarray(rng.uniform(0, 50, (N, K)), jnp.float32)
+    b = np.sort(rng.uniform(50, 500, (N, Kt)), axis=1)
+    b[:, -1] = 1e30
+    bounds = jnp.asarray(b, jnp.float32)
+    rates = jnp.asarray(rng.uniform(0.01, 0.2, (N, Kt)), jnp.float32)
+    reset = jnp.zeros(K, jnp.int32)
+    out, cum_out = ops.tiered_cost_scan(cum0, d, bounds, rates, reset)
+    want, cum_want = tiered_cost_scan_ref(cum0, d, bounds, rates, reset)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(cum_out), np.asarray(cum_want), rtol=1e-6)

@@ -6,7 +6,11 @@ aggregation + the two-level ports x hours vmapped scan), verifies the
 per-port decision sequences against the float64 Python reference, and
 reports the §VII-A economics: lease-sharing savings vs the PR-1 per-link
 planner on the SAME routed (pair, port) choices, and the per-port oracle
-gap at a fixed routing.
+gap at a fixed routing. The multi-hop smoke section (on by default) also
+times the leg-based engine on a hop-depth-2 relay plan and gates the two
+savings claims: relay routing >= 5% cheaper than 1-hop-only on the relay
+scenario, and the multicast forwarding tree beats its per-leaf unicast
+expansion (``relay_savings_nonneg``, an absolute-floor CI metric).
 
 CLI:
   python -m benchmarks.bench_topology                 # 96 pairs, 4 facilities
@@ -25,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import enable_x64
 
 from repro.fleet.plan import (
+    build_multicast_scenario,
+    build_relay_scenario,
     build_topology_report,
     build_topology_scenario,
     optimize_routing,
@@ -33,6 +39,45 @@ from repro.fleet.plan import (
 )
 
 from ._util import save_rows, write_bench_artifact
+
+
+def _multihop_smoke(repeats: int):
+    """Relay + multicast smoke: leg-based engine throughput on a hop-depth-2
+    plan, plus the two machine-independent savings claims the gate pins —
+    relay routing beats 1-hop-only by >=5% on the relay scenario and the
+    forwarding tree beats the per-leaf unicast expansion on the
+    broadcast-burst scenario."""
+    rsc = build_relay_scenario(horizon=1200, seed=0)
+    routing = optimize_routing(rsc.topo, rsc.demand)
+    assert routing.hop_depth >= 2, (
+        "relay scenario failed to take the relay path"
+    )
+    hpm = rsc.topo.hours_per_month
+    with enable_x64():
+        arrays = rsc.topo.stack(routing, jnp.float64)
+        demand = jax.block_until_ready(jnp.asarray(rsc.demand, jnp.float64))
+    plan = plan_topology(arrays, demand, hours_per_month=hpm)
+    jax.block_until_ready(plan["x"])
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        plan = plan_topology(arrays, demand, hours_per_month=hpm)
+        jax.block_until_ready(plan["x"])
+        times.append(time.perf_counter() - t0)
+    n_rows, horizon = rsc.demand.shape
+    multihop_phps = n_rows * horizon / min(times)
+    relay_savings = build_topology_report(rsc, plan, routing).totals[
+        "relay_savings"
+    ]
+
+    msc = build_multicast_scenario(n_leaves=4, horizon=1200, seed=0)
+    mrouting = optimize_routing(msc.topo, msc.demand)
+    mplan = plan_topology(msc.topo, msc.demand, routing=mrouting)
+    tree_savings = build_topology_report(msc, mplan, mrouting).totals[
+        "tree_sharing_savings"
+    ]
+    ok = relay_savings >= 0.05 and tree_savings > 0.0
+    return multihop_phps, relay_savings, tree_savings, ok
 
 
 def run(
@@ -46,6 +91,7 @@ def run(
     include_oracle: bool = False,
     seed: int = 0,
     renew_in_chunks: bool = False,
+    multihop: bool = True,
 ):
     assert n_pairs >= 1 and horizon >= 24
     sc = build_topology_scenario(
@@ -128,12 +174,27 @@ def run(
         "oracle_gap": t.get("oracle_gap"),
         "families": sc.summary(),
     }]
-    save_rows("topology", rows)
-    return rows, (
+    derived = (
         f"pair_hours_per_s={pair_hours_per_s:.3g} "
         f"sharing_savings={100 * t['lease_sharing_savings']:.1f}% "
         f"ports={rep.ports_used}/{sc.n_ports}"
     )
+    if multihop:
+        mh_phps, relay_savings, tree_savings, ok = _multihop_smoke(repeats)
+        rows[0].update({
+            "multihop_pair_hours_per_s": mh_phps,
+            "relay_savings": relay_savings,
+            "tree_sharing_savings": tree_savings,
+            # Absolute-floor gate indicator: relay routing saves >= 5% vs
+            # 1-hop-only AND the forwarding tree beats per-leaf unicast.
+            "relay_savings_nonneg": 1.0 if ok else 0.0,
+        })
+        derived += (
+            f" relay_savings={100 * relay_savings:.1f}% "
+            f"tree_savings={100 * tree_savings:.1f}%"
+        )
+    save_rows("topology", rows)
+    return rows, derived
 
 
 def main() -> None:
@@ -147,6 +208,10 @@ def main() -> None:
     ap.add_argument("--renew-in-chunks", action="store_true")
     ap.add_argument("--oracle", action="store_true", help="per-port DP column")
     ap.add_argument("--no-verify", action="store_true")
+    ap.add_argument(
+        "--no-multihop", action="store_true",
+        help="skip the relay/multicast smoke section",
+    )
     ap.add_argument(
         "--smoke", action="store_true",
         help="CI mode: 16 pairs x 2000 h, full verification, BENCH artifact",
@@ -165,6 +230,7 @@ def main() -> None:
         include_oracle=args.oracle,
         seed=args.seed,
         renew_in_chunks=args.renew_in_chunks,
+        multihop=not args.no_multihop,
     )
     r = rows[0]
     print(

@@ -86,7 +86,7 @@ def main() -> None:
         if hour == REROUTE_AT:
             # Re-pack acme's hottest pair onto its least-loaded port: a pure
             # pooled-operand write at the chunk boundary, state intact.
-            idx = np.asarray(r0).copy()     # (P,) routed-port indices
+            idx = np.asarray(r0.primary).copy()  # (P,) routed-port indices
             hot = int(np.argmax(tsc.demand[:, :REROUTE_AT].mean(axis=1)))
             load = np.bincount(
                 idx, weights=np.asarray(tsc.demand[:, hour - 1]),
@@ -94,7 +94,7 @@ def main() -> None:
             )
             idx[hot] = int(np.argmin(load))
             before = gw.compiles
-            gw.reroute("acme", tsc.topo.validate_routing(idx))
+            gw.reroute("acme", tsc.topo.plan(idx))
             print(f"hour {hour}: acme rerouted pair {hot} -> port "
                   f"{idx[hot]} (compiles {before} -> {gw.compiles})")
         if hour == CHURN_AT:

@@ -67,19 +67,20 @@ def main() -> None:
 
     # An alternative routing: move the first movable pair to another
     # candidate port (what a live re-packer would do on drifted demand).
-    r1 = np.asarray(r0).copy()
+    idx = np.asarray(r0.primary).copy()
     for i, pr in enumerate(sc.topo.pairs):
-        others = [c for c in pr.candidates if c != r0[i]]
+        others = [c for c in pr.candidates if c != idx[i]]
         if others:
-            r1[i] = int(others[0])
+            idx[i] = int(others[0])
             break
+    r1 = sc.topo.plan(idx)
 
     # Steady loop: one chunked dispatch per simulated day (step_many is
     # bit-exact vs per-tick step(), so the monitors audit the same stream),
     # finishing the ragged tail per-tick — the two interleave freely.
     t = 0
     while t + CHUNK_K <= HORIZON:
-        if t == REROUTE_AT and not np.array_equal(r1, np.asarray(r0)):
+        if t == REROUTE_AT and not np.array_equal(idx, np.asarray(r0.primary)):
             rt.reroute(r1)
         rt.step_many(sc.demand[:, t:t + CHUNK_K])
         t += CHUNK_K

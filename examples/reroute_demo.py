@@ -41,15 +41,15 @@ def stream(sc, routing, *, live: bool):
     rt = FleetRuntime(sc.topo, routing=routing)
     cost = 0.0
     swaps = []
-    r = np.asarray(routing).copy()
+    cur = routing  # RoutingPlan
     for t in range(sc.demand.shape[1]):
         if live and t > 0 and t % REPACK_EVERY == 0:
             seen = sc.demand[:, max(0, t - OBS_WINDOW):t]
             r_new = optimize_routing(sc.topo, mean_demand=seen.mean(axis=1))
-            if not np.array_equal(r_new, r):
+            if not np.array_equal(r_new.primary, cur.primary):
                 rt.reroute(r_new)
-                swaps.append((t, r.copy(), r_new.copy()))
-                r = r_new
+                swaps.append((t, cur, r_new))
+                cur = r_new
         out = rt.step(sc.demand[:, t])
         cost += float(out["cost"].sum())
     return cost, swaps, rt
@@ -62,15 +62,16 @@ def main() -> None:
     ports = [p.name for p in sc.topo.ports]
     print(f"pairs {names} over ports {ports}")
     print(f"day-one routing: "
-          f"{ {n: ports[m] for n, m in zip(names, r0)} }")
+          f"{ {n: ports[m] for n, m in zip(names, r0.primary)} }")
 
     frozen_cost, _, _ = stream(sc, r0, live=False)
     live_cost, swaps, rt = stream(sc, r0, live=True)
 
     for t, r_old, r_new in swaps:
+        old_i, new_i = r_old.primary, r_new.primary
         moved = [
-            f"{names[i]}: {ports[r_old[i]]} -> {ports[r_new[i]]}"
-            for i in range(len(names)) if r_old[i] != r_new[i]
+            f"{names[i]}: {ports[old_i[i]]} -> {ports[new_i[i]]}"
+            for i in range(len(names)) if old_i[i] != new_i[i]
         ]
         print(f"hour {t}: re-routed ({'; '.join(moved)})")
     print(f"frozen-routing cost ${frozen_cost:,.0f}  "

@@ -25,8 +25,11 @@ computation. Mapping back to the paper:
 * §VII-A multi-pair setting ("one CCI lease serves several region pairs")
   ->  :mod:`repro.fleet.topology` + :func:`engine.plan_topology`: region
   pairs route onto shared CCI ports at colocation facilities through a
-  traceable one-hot routing matrix, toggled per PORT on pair-aggregated
-  window costs.
+  typed :class:`~repro.fleet.routing.RoutingPlan` (stacked into a padded
+  traceable leg list), toggled per PORT on pair-aggregated window costs.
+  Rows may be multi-hop relay paths (:class:`~repro.fleet.topology.PathSpec`)
+  or point-to-multipoint forwarding trees
+  (:class:`~repro.fleet.topology.MulticastSpec`) — extra legs, same engine.
 
 **The public surface is versioned into three namespaces** (since the
 multi-tenant gateway release):

@@ -51,8 +51,9 @@ from repro.core.togglecci import run_togglecci
 from repro.kernels.tiered_cost import tiered_cost_batched
 
 from .policy import make_policy, policy_scan
+from .routing import RoutingOperand, RoutingPlan, as_routing_plan
 from .spec import FleetArrays, FleetSpec
-from .topology import TopologyArrays, TopologySpec, optimize_routing, routing_matrix
+from .topology import TopologyArrays, TopologySpec, optimize_routing
 
 _JIT_CACHE: dict = {}
 
@@ -141,25 +142,38 @@ def _route_stage(arrays, routing, d_pair, vpn_pair):
     VPN rides the public internet, so only the CCI volume sees the port's
     hard capacity (linksim F1); the lease is paid once, attachments per pair.
 
-    Aggregation is a ``segment_sum`` in ascending-PAIR order, NOT a dense
-    matmul with the one-hot matrix: XLA's blocked f64 dot reductions are
-    shape-dependent (an (M,P)@(P,T) matmul and the streaming tick's matvec
-    disagree in the last ulp past ~64 ports), while scatter-add accumulates
-    sequentially in update order — bit-identical between the full-horizon
-    offline plan, per-tick streaming columns, and the python float64
-    reference loop (measured across shapes up to 2048x2048), and O(P·T)
-    instead of O(M·P·T) on top.
+    Topology mode consumes the padded :class:`RoutingOperand` LEG list:
+    each leg attaches one demand row to one port, so a multi-hop path is
+    just several legs of the same row (demand and attachment count at every
+    hop; the VPN counterfactual split 1/n_hops so the row's tunnel is
+    counted once across its ports) and a forwarding tree is one leg per
+    shared edge. Aggregation is a ``segment_sum`` over legs in ROW-major
+    leg order, NOT a dense matmul with a one-hot matrix: XLA's blocked f64
+    dot reductions are shape-dependent (an (M,P)@(P,T) matmul and the
+    streaming tick's matvec disagree in the last ulp past ~64 ports), while
+    scatter-add accumulates sequentially in update order — bit-identical
+    between the full-horizon offline plan, per-tick streaming columns, and
+    the python float64 reference loop (measured across shapes up to
+    2048x2048), and O(E·T) instead of O(M·P·T) on top. A 1-hop unicast
+    operand has one identity-ordered leg per row with unit weights, so the
+    gather is the identity and every weight multiply is ``x * 1.0`` —
+    bit-for-bit the historical pair-indexed scatter (property-tested).
+    Padding legs carry zero weights: exact ``+0.0`` contributions on the
+    pad port, so growing the leg bound never changes a cost bit.
     """
     if routing is None:
         d_row, vpn = d_pair, vpn_pair
         n_pairs = jnp.ones_like(arrays.L_cci)
     else:
-        idx = jnp.argmax(routing, axis=0)                             # (P,)
+        lp, lm = routing.leg_pair, routing.leg_port                   # (E,)
         M = arrays.L_cci.shape[0]
-        seg = lambda v: jax.ops.segment_sum(v, idx, num_segments=M)
-        vpn = seg(vpn_pair)                                           # (M, T)
-        d_row = jnp.minimum(seg(d_pair), arrays.port_capacity[:, None])
-        n_pairs = seg(jnp.ones(d_pair.shape[0], d_pair.dtype))        # (M,)
+        seg = lambda v: jax.ops.segment_sum(v, lm, num_segments=M)
+        vpn = seg(vpn_pair[lp] * routing.vpn_w[:, None])              # (M, T)
+        d_row = jnp.minimum(
+            seg(d_pair[lp] * routing.attach_w[:, None]),
+            arrays.port_capacity[:, None],
+        )
+        n_pairs = seg(routing.attach_w)                               # (M,)
     cci = (
         arrays.L_cci[:, None]
         + (arrays.V_cci * n_pairs)[:, None]
@@ -301,7 +315,7 @@ def plan_topology(
     topo: Union[TopologySpec, TopologyArrays],
     demand,
     *,
-    routing: Optional[Sequence[int]] = None,
+    routing=None,
     policy=None,
     hours_per_month: int = 730,
     renew_in_chunks: bool = False,
@@ -311,8 +325,10 @@ def plan_topology(
     Args:
       topo: a :class:`TopologySpec` (stacked here under x64) or pre-stacked
         :class:`TopologyArrays` (then ``routing`` is already baked in).
-      demand: (P, T) hourly GB per region pair.
-      routing: (P,) candidate-port index per pair. ``None`` with a spec runs
+      demand: (P, T) hourly GB per region pair / multicast group.
+      routing: a :class:`repro.fleet.routing.RoutingPlan` (legacy (P,)
+        indices / (M, P) one-hot matrices still work through the
+        ``DeprecationWarning`` shim). ``None`` with a spec runs
         :func:`repro.fleet.topology.optimize_routing` on the demand first —
         that is the "co-optimize" entry point.
       policy: per-PORT policy pytree (e.g.
@@ -329,6 +345,9 @@ def plan_topology(
             kind = topo.policy
             if routing is None:
                 routing = optimize_routing(topo, np.asarray(demand))
+            routing = as_routing_plan(
+                routing, n_ports=topo.n_ports, context="plan_topology"
+            )
             arrays = topo.stack(routing, jnp.float64)
         else:
             assert routing is None, "pre-stacked arrays already carry a routing"
@@ -352,8 +371,10 @@ def replay_plan_topology(
     """Offline replay of a PIECEWISE-CONSTANT routing schedule.
 
     ``schedule`` is ``[(start_hour, routing), ...]`` with the first start at
-    hour 0 and strictly increasing starts; each ``routing`` is (P,) port
-    indices or an (M, P) one-hot matrix. The port cost/demand series are
+    hour 0 and strictly increasing starts; each ``routing`` is a
+    :class:`RoutingPlan` or an already-padded :class:`RoutingOperand`
+    (legacy (P,) indices / (M, P) one-hot matrices go through the
+    deprecation shim). The port cost/demand series are
     the hour-by-hour stitch of each segment's ``routed_cost_series`` (the
     pair stage is routing-independent, so this is exactly what a streaming
     run that swaps its routing operand at those hours prices), and ONE
@@ -382,19 +403,25 @@ def replay_plan_topology(
             policy = make_policy(
                 "reactive", arrays.toggle, renew_in_chunks=renew_in_chunks
             )
+        E = arrays.routing.leg_pair.shape[-1]
         bounds = starts + [T]
         segs = []
         for (a, b), (_, r) in zip(zip(bounds[:-1], bounds[1:]), schedule):
-            r = np.asarray(r)
-            R = (
-                jnp.asarray(r, jnp.float64)
-                if r.ndim == 2
-                else routing_matrix(r, M, jnp.float64)
-            )
+            if isinstance(r, RoutingOperand):
+                op = r
+            else:
+                plan = as_routing_plan(
+                    r, n_ports=M, context="replay_plan_topology"
+                )
+                # Pad to the arrays' leg bound when it fits, so every
+                # segment reuses the one compiled program shape.
+                if plan.total_hops <= E:
+                    plan = plan.pad_to(E)
+                op = plan.operand(jnp.float64)
             # Full-horizon plan per routing through the SAME jitted builder
             # (identical op fusion → identical floats), stitched per hour.
             seg = _run_plan(
-                arrays._replace(routing=R), demand, policy, hours_per_month
+                arrays._replace(routing=op), demand, policy, hours_per_month
             )
             segs.append(
                 {k: seg[k][:, a:b]
@@ -432,7 +459,7 @@ def offline_stream_oracle(
     """
     if isinstance(arrays, TopologyArrays):
         if schedule is None:
-            schedule = [(0, np.argmax(np.asarray(arrays.routing), axis=0))]
+            schedule = [(0, arrays.routing)]
         return replay_plan_topology(
             arrays, demand, schedule,
             policy=policy, hours_per_month=hours_per_month,
@@ -456,43 +483,49 @@ def _month_cum_np(d: np.ndarray, hours_per_month: int) -> np.ndarray:
 
 
 def topology_port_costs_reference(
-    topo: TopologySpec, demand, routing: Sequence[int]
+    topo: TopologySpec, demand, routing
 ) -> Dict[str, np.ndarray]:
     """Float64 numpy port-aggregated cost series (reference / oracle input).
 
     Returns ``vpn``/``cci`` (M, T) hourly counterfactuals plus the clipped
     ``pair_demand``/``port_demand`` — the exact quantities the jitted
-    aggregation stage computes.
+    aggregation stage computes. ``routing`` is anything
+    :meth:`TopologySpec.plan` normalizes (plans, indices, path lists);
+    multi-hop rows contribute demand and an attachment at EVERY hop and a
+    ``1/n_hops`` share of their VPN counterfactual (tunnels are priced once
+    per row, not per hop).
     """
-    r = topo.validate_routing(routing)
+    plan = topo.plan(routing)
     demand = np.asarray(demand, dtype=np.float64)
     P, T = demand.shape
     assert P == topo.n_pairs
-    d = np.minimum(
-        demand, np.array([p.capacity_gb_hr for p in topo.pairs])[:, None]
-    )
+    d = np.minimum(demand, topo.row_capacities()[:, None])
     vpn_pair = np.zeros((P, T))
-    for i, pr in enumerate(topo.pairs):
+    for i in range(P):
         cum = _month_cum_np(d[i], topo.hours_per_month)
-        vpn_pair[i] = pr.L_vpn + tiered_marginal_cost_np(pr.vpn_tier, cum, d[i])
+        vpn_pair[i] = topo.row_vpn_lease(i) + tiered_marginal_cost_np(
+            topo.row_vpn_tier(i), cum, d[i]
+        )
 
     M = topo.n_ports
     vpn = np.zeros((M, T))
     cci = np.zeros((M, T))
     d_port = np.zeros((M, T))
     for m, po in enumerate(topo.ports):
-        idx = np.where(r == m)[0]
-        agg = d[idx].sum(axis=0) if idx.size else np.zeros(T)
+        idx = [i for i, path in enumerate(plan.paths) if m in path]
+        agg = d[idx].sum(axis=0) if idx else np.zeros(T)
         d_port[m] = np.minimum(agg, po.capacity_gb_hr)
-        vpn[m] = vpn_pair[idx].sum(axis=0) if idx.size else 0.0
-        cci[m] = po.L_cci + po.V_cci * idx.size + po.c_cci * d_port[m]
+        if idx:
+            w = np.array([1.0 / len(plan.paths[i]) for i in idx])
+            vpn[m] = (vpn_pair[idx] * w[:, None]).sum(axis=0)
+        cci[m] = po.L_cci + po.V_cci * len(idx) + po.c_cci * d_port[m]
     return {"vpn": vpn, "cci": cci, "pair_demand": d, "port_demand": d_port}
 
 
 def plan_topology_reference(
     topo: TopologySpec,
     demand,
-    routing: Sequence[int],
+    routing,
     *,
     renew_in_chunks: bool = False,
     port_costs: Optional[Dict[str, np.ndarray]] = None,
@@ -553,9 +586,7 @@ def plan_topology_reference(
     }
 
 
-def topology_oracle(
-    topo: TopologySpec, demand, routing: Sequence[int]
-) -> np.ndarray:
+def topology_oracle(topo: TopologySpec, demand, routing) -> np.ndarray:
     """Offline-optimal (DP) cost per port for a FIXED routing — the report's
     leasing-oracle column (routing itself is not oracle-optimized)."""
     from repro.core.costmodel import HourlyCosts

@@ -49,11 +49,19 @@ from .report import (  # noqa: F401
     build_topology_report,
     toggle_events,
 )
+from .routing import (  # noqa: F401
+    RoutingOperand,
+    RoutingPlan,
+    as_routing_plan,
+)
 from .scenario import (  # noqa: F401
     FAMILIES,
     FleetScenario,
     TopologyScenario,
+    broadcast_burst_trace,
     build_fleet_scenario,
+    build_multicast_scenario,
+    build_relay_scenario,
     build_reroute_scenario,
     build_topology_scenario,
     link_capacity_gb_hr,
@@ -67,12 +75,15 @@ from .spec import (  # noqa: F401
     fleet_from_params,
 )
 from .topology import (  # noqa: F401
+    MulticastSpec,
     PairSpec,
+    PathSpec,
     PortSpec,
     TopologyArrays,
     TopologySpec,
     dedicated_fleet,
     identity_topology,
+    multicast_unicast_expansion,
     optimize_routing,
     refine_routing,
     routing_matrix,
@@ -81,9 +92,13 @@ from .topology import (  # noqa: F401
 __all__ = [
     # specs
     "FleetArrays", "FleetSpec", "LinkSpec", "fleet_from_params",
-    "PairSpec", "PortSpec", "TopologyArrays", "TopologySpec",
-    "dedicated_fleet", "identity_topology", "optimize_routing",
+    "MulticastSpec", "PairSpec", "PathSpec", "PortSpec",
+    "TopologyArrays", "TopologySpec",
+    "dedicated_fleet", "identity_topology",
+    "multicast_unicast_expansion", "optimize_routing",
     "refine_routing", "routing_matrix",
+    # routing currency
+    "RoutingOperand", "RoutingPlan", "as_routing_plan",
     # engines
     "RoutedSeries", "fleet_oracle", "plan_fleet", "plan_fleet_reference",
     "plan_topology", "plan_topology_reference", "replay_plan_topology",
@@ -97,9 +112,10 @@ __all__ = [
     "hysteresis_policy", "make_policy", "policy_scan", "reactive_policy",
     # scenarios
     "FAMILIES", "FleetScenario", "TopologyScenario",
-    "build_fleet_scenario", "build_reroute_scenario",
-    "build_topology_scenario", "link_capacity_gb_hr",
-    "port_capacity_gb_hr", "vlan_access_gb_hr",
+    "broadcast_burst_trace", "build_fleet_scenario",
+    "build_multicast_scenario", "build_relay_scenario",
+    "build_reroute_scenario", "build_topology_scenario",
+    "link_capacity_gb_hr", "port_capacity_gb_hr", "vlan_access_gb_hr",
     # reports
     "FleetReport", "LinkReport", "PortReport", "TopologyReport",
     "build_report", "build_topology_report", "toggle_events",

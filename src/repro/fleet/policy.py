@@ -586,7 +586,19 @@ def forecast_topology_policy(
 
     from .engine import routed_cost_series
 
-    R = np.asarray(arrays.routing, np.float64)
+    # Multi-hot (M, P) membership matrix off the routing operand's legs —
+    # a multi-hop row contributes its demand to EVERY hop's aggregate,
+    # exactly like the engine's leg-list segment_sum.
+    op = arrays.routing
+    R = np.zeros(
+        (int(np.asarray(arrays.L_cci).shape[0]),
+         int(np.asarray(arrays.L_vpn).shape[0]))
+    )
+    np.add.at(
+        R,
+        (np.asarray(op.leg_port), np.asarray(op.leg_pair)),
+        np.asarray(op.attach_w, np.float64),
+    )
     pair_cap = np.asarray(arrays.pair_capacity, np.float64)[:, None]
     port_cap = np.asarray(arrays.port_capacity, np.float64)[:, None]
     agg = lambda d: np.minimum(

@@ -25,7 +25,7 @@ The policy layer adds two more:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -40,9 +40,14 @@ from .engine import (
     plan_topology,
     topology_oracle,
 )
+from .routing import RoutingPlan, as_routing_plan
 from .scenario import FleetScenario, TopologyScenario
 from .spec import FleetSpec
-from .topology import dedicated_fleet
+from .topology import (
+    dedicated_fleet,
+    multicast_unicast_expansion,
+    optimize_routing,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -259,12 +264,14 @@ class PortReport:
 class TopologyReport:
     ports: Tuple[PortReport, ...]
     horizon: int
-    routing: Tuple[int, ...]
+    routing: RoutingPlan
     dedicated_cost: Optional[float]  # same routing, no lease sharing (PR-1 view)
-    refined_routing: Optional[Tuple[int, ...]] = None  # pair-move local search
+    refined_routing: Optional[RoutingPlan] = None      # local-search output
     refined_cost: Optional[float] = None               # reactive replan, refined routing
     refine_base_cost: Optional[float] = None           # reactive cost, input routing
-    refine_move_mix: Optional[Dict[str, int]] = None   # applied single vs swap moves
+    refine_move_mix: Optional[Dict[str, int]] = None   # applied single/swap/relay moves
+    relay_baseline_cost: Optional[float] = None        # reactive replan, 1-hop-only routing
+    tree_unicast_cost: Optional[float] = None          # reactive replan, per-leaf unicast
 
     @property
     def totals(self) -> Dict[str, float]:
@@ -301,6 +308,24 @@ class TopologyReport:
                     if gap > 0
                     else float("nan")
                 )
+        if self.relay_baseline_cost is not None:
+            # Realized-cost saving of multi-hop relay routing over the same
+            # planner restricted to 1-hop candidates (both reactive).
+            agg["one_hop_cost"] = self.relay_baseline_cost
+            agg["relay_savings"] = (
+                1.0 - agg["togglecci"] / self.relay_baseline_cost
+                if self.relay_baseline_cost
+                else 0.0
+            )
+        if self.tree_unicast_cost is not None:
+            # Edge sharing: the tree plan vs the per-leaf unicast expansion
+            # of every multicast group (both reactive).
+            agg["unicast_expansion_cost"] = self.tree_unicast_cost
+            agg["tree_sharing_savings"] = (
+                1.0 - agg["togglecci"] / self.tree_unicast_cost
+                if self.tree_unicast_cost
+                else 0.0
+            )
         if self.refined_cost is not None:
             # Baseline is the REACTIVE cost of the input routing (the metric
             # refine_routing optimizes) — the passed-in plan may have run a
@@ -358,6 +383,17 @@ class TopologyReport:
                     "reactive-vs-oracle gap closed)"
                 )
             lines.append(line)
+        if "relay_savings" in t:
+            lines.append(
+                f"multi-hop relays: {100 * t['relay_savings']:+.2f}% vs "
+                f"1-hop-only routing (${t['one_hop_cost']:.0f}), "
+                f"hop depth {self.routing.hop_depth}"
+            )
+        if "tree_sharing_savings" in t:
+            lines.append(
+                f"forwarding trees: {100 * t['tree_sharing_savings']:+.2f}% vs "
+                f"per-leaf unicast (${t['unicast_expansion_cost']:.0f})"
+            )
         if "refined_cost" in t:
             line = (
                 f"refined routing: ${t['refined_cost']:.0f}  "
@@ -375,7 +411,7 @@ class TopologyReport:
 def build_topology_report(
     scenario: TopologyScenario,
     plan: Dict[str, np.ndarray],
-    routing: Sequence[int],
+    routing,
     *,
     include_oracle: bool = False,
     include_dedicated_baseline: bool = True,
@@ -399,11 +435,23 @@ def build_topology_report(
     ``refine`` runs the pair-move local search
     (:func:`repro.fleet.topology.refine_routing`) after the greedy routing
     and reports ``routing_improvement`` on a full replan.
+
+    ``routing`` is a :class:`RoutingPlan` (legacy bare arrays go through
+    the deprecation shim). When the plan uses multi-hop relays, the report
+    automatically adds ``relay_savings`` — the realized-cost saving vs a
+    reactive replan of :func:`optimize_routing(..., max_hops=1)` — and when
+    the topology has multicast groups, ``tree_sharing_savings`` vs a
+    reactive replan of the per-leaf unicast expansion
+    (:func:`repro.fleet.topology.multicast_unicast_expansion`).
     """
+    from .policy import reactive_policy
     from .topology import refine_routing
 
     topo = scenario.topo
-    r = topo.validate_routing(routing)
+    r = as_routing_plan(
+        routing, n_ports=topo.n_ports, context="build_topology_report"
+    )
+    topo.validate_plan(r)
     state = np.asarray(plan["state"])
     x = np.asarray(plan["x"])
     toggle_cost = np.asarray(plan["toggle_cost"], dtype=np.float64)
@@ -429,6 +477,19 @@ def build_topology_report(
         else None
     )
 
+    def _reactive_replan_cost(t, rt, demand) -> float:
+        """Reactive full replan of routing ``rt`` on topology ``t`` — the
+        common policy-controlled baseline every savings metric compares
+        against (the spec's default kind may be one the engine cannot
+        resolve on its own, e.g. "forecast")."""
+        with enable_x64():
+            arr = t.stack(rt, jnp.float64)
+            pol = reactive_policy(arr.toggle, renew_in_chunks=renew_in_chunks)
+        out = plan_topology(
+            arr, demand, policy=pol, hours_per_month=t.hours_per_month
+        )
+        return float(np.sum(np.asarray(out["toggle_cost"])))
+
     refined_routing = refined_cost = refine_base_cost = refine_move_mix = None
     if refine:
         r2, info = refine_routing(
@@ -439,21 +500,25 @@ def build_topology_report(
             renew_in_chunks=renew_in_chunks,
         )
         # Replan under an EXPLICIT reactive policy: the local search ranks
-        # moves on reactive realized costs, and the spec's default kind may
-        # be one the engine cannot resolve on its own ("forecast").
-        from .policy import reactive_policy
-
-        with enable_x64():
-            arrays2 = topo.stack(r2, jnp.float64)
-            pol = reactive_policy(arrays2.toggle, renew_in_chunks=renew_in_chunks)
-        replanned = plan_topology(
-            arrays2, scenario.demand, policy=pol,
-            hours_per_month=topo.hours_per_month,
-        )
-        refined_cost = float(np.sum(np.asarray(replanned["toggle_cost"])))
-        refined_routing = tuple(int(v) for v in r2)
+        # moves on reactive realized costs.
+        refined_cost = _reactive_replan_cost(topo, r2, scenario.demand)
+        refined_routing = r2
         refine_base_cost = float(info["cost_before"])
         refine_move_mix = dict(info["move_mix"])
+
+    relay_baseline_cost = None
+    if r.hop_depth > 1:
+        one_hop = optimize_routing(topo, scenario.demand, max_hops=1)
+        relay_baseline_cost = _reactive_replan_cost(
+            topo, one_hop, scenario.demand
+        )
+
+    tree_unicast_cost = None
+    if topo.groups:
+        etopo, row_map = multicast_unicast_expansion(topo)
+        d_uni = np.asarray(scenario.demand)[row_map]
+        uni_routing = optimize_routing(etopo, d_uni, max_hops=1)
+        tree_unicast_cost = _reactive_replan_cost(etopo, uni_routing, d_uni)
 
     rows: List[PortReport] = []
     for m, po in enumerate(topo.ports):
@@ -478,10 +543,12 @@ def build_topology_report(
     return TopologyReport(
         ports=tuple(rows),
         horizon=T,
-        routing=tuple(int(v) for v in r),
+        routing=r,
         dedicated_cost=dedicated_cost,
         refined_routing=refined_routing,
         refined_cost=refined_cost,
         refine_base_cost=refine_base_cost,
         refine_move_mix=refine_move_mix,
+        relay_baseline_cost=relay_baseline_cost,
+        tree_unicast_cost=tree_unicast_cost,
     )

@@ -24,11 +24,14 @@ jitted vmapped step, carrying all policy state explicitly:
 
 Two demand routings, mirroring the offline engines: *fleet* (each row one
 link) and *topology* (pair demand folded onto shared CCI ports through the
-routing matrix, pair-level tier state + port-level FSMs). In topology mode
-the routing matrix is part of :class:`RuntimeState` — a swappable traceable
-operand of the compiled tick — and :meth:`FleetRuntime.reroute` swaps it
-MID-STREAM without recompiling or touching any carried state: from the swap
-tick on, decisions are bit-exact vs an offline
+routing legs, pair-level tier state + port-level FSMs). In topology mode
+the routing — a :class:`repro.fleet.routing.RoutingPlan`, stacked to its
+padded leg-list operand — is part of :class:`RuntimeState`, a swappable
+traceable operand of the compiled tick: multi-hop relay paths and multicast
+forwarding trees are just extra weighted legs under the same ``segment_sum``,
+and :meth:`FleetRuntime.reroute` swaps any plan fitting the compiled leg
+bound MID-STREAM without recompiling or touching any carried state: from the
+swap tick on, decisions are bit-exact vs an offline
 :func:`repro.fleet.engine.replay_plan_topology` that applies the same
 routing at the same hour (property-tested in ``tests/test_fleet_runtime.py``).
 
@@ -57,6 +60,7 @@ from repro.core.planner import COMPRESS_RATIO, collective_mode
 from repro.obs.metrics import flatten_ring, init_ring, reset_ring, update_ring
 
 from .policy import ForecastGatedPolicy, make_policy, predicted_mode_costs
+from .routing import RoutingOperand, RoutingPlan, as_routing_plan
 from .spec import FleetArrays, FleetSpec
 from .topology import TopologyArrays, TopologySpec
 
@@ -87,13 +91,14 @@ class RuntimeState(NamedTuple):
     ssm_h: jax.Array        # device: (M, S) live forecaster state ((M, 0) unused)
     t_dev: jax.Array        # device twin of t (transfers cost ~100µs; the
                             # replay index must not pay one per tick)
-    routing: object         # device: (M, P) one-hot routing operand in
-                            # topology mode (None in fleet mode) — swappable
-                            # mid-stream via FleetRuntime.reroute()
-    routing_idx: object     # device: (P,) int32 routed-port index — the
-                            # one-hot's compact twin the tick aggregates
-                            # with (segment_sum in pair order, matching the
-                            # offline engine bit-for-bit); swapped together
+    routing: object         # device: RoutingOperand leg list in topology
+                            # mode (None in fleet mode) — the padded
+                            # (row, port, weight) legs the tick aggregates
+                            # with (segment_sum over leg_port, matching the
+                            # offline engine bit-for-bit) plus the (P,)
+                            # primary first-hop twin the obs ring and
+                            # modes() consume; swappable mid-stream via
+                            # FleetRuntime.reroute() at a fixed leg bound
     dcum: np.ndarray        # (P,) cumulative clipped billed demand, == full[t]
     dcum_month: np.ndarray  # (P,) dcum at the current month's start
     vpn_pref: np.ndarray    # (M,) exclusive prefix of hourly VPN cost
@@ -225,7 +230,7 @@ def _build_step(
     the hot path stays one dispatch with no per-tick recompiles.
     """
 
-    def step(arrays, policy, fc, fsm, ssm_h, t, routing_idx, ring, hist_edges, packed):
+    def step(arrays, policy, fc, fsm, ssm_h, t, routing, ring, hist_edges, packed):
         f = jnp.result_type(float)
         P = (arrays.pair_capacity if topology else arrays.capacity).shape[0]
         M = arrays.toggle.theta1.shape[0]
@@ -253,23 +258,27 @@ def _build_step(
             )[:, 0]
             vpn_pair = arrays.L_vpn + vpn_transfer                    # (P,)
             # Aggregate through the RuntimeState's swappable routing
-            # operand (the one-hot matrix's int32 index twin, swapped
-            # together with it by reroute()): segment_sum in ascending-pair
-            # order, the same formulation as the offline _route_stage
-            # (bit-exactness) and O(P) per tick instead of an O(M·P)
-            # dense one-hot matvec.
-            seg = lambda v: jax.ops.segment_sum(v, routing_idx, num_segments=M)
-            vpn_t = seg(vpn_pair)                                     # (M,)
+            # operand: the padded LEG list (each leg one row→port
+            # attachment with a VPN share and an attachment weight),
+            # segment-summed over leg_port in leg order — the same
+            # formulation as the offline _route_stage (bit-exactness: a
+            # 1-hop plan's legs are the identity gather with unit weights,
+            # and padding legs add exact +0.0) and O(E) per tick instead
+            # of an O(M·P) dense matvec.
+            lp, lm = routing.leg_pair, routing.leg_port
+            vw, aw = routing.vpn_w, routing.attach_w
+            seg = lambda v: jax.ops.segment_sum(v, lm, num_segments=M)
+            vpn_t = seg(vpn_pair[lp] * vw)                            # (M,)
             d_cci = (
                 d_pair if cci_demand_t is None
                 else jnp.minimum(cci_demand_t.astype(f), arrays.pair_capacity)
             )
-            d_bill = jnp.minimum(seg(d_cci), arrays.port_capacity)    # (M,)
-            n_pairs = seg(jnp.ones(P, f))
+            d_bill = jnp.minimum(seg(d_cci[lp] * aw), arrays.port_capacity)
+            n_pairs = seg(aw)
             cci_t = (
                 arrays.L_cci + arrays.V_cci * n_pairs + arrays.c_cci * d_bill
             )
-            d_row = jnp.minimum(seg(d_pair), arrays.port_capacity)    # (M,)
+            d_row = jnp.minimum(seg(d_pair[lp] * aw), arrays.port_capacity)
         else:
             d_pair = jnp.minimum(demand_t.astype(f), arrays.capacity)  # (N,)
             vpn_transfer = tiered_marginal_cost_tables(
@@ -316,7 +325,7 @@ def _build_step(
                 x_t=x_t, state_t=state_t, vpn_t=vpn_t, cci_t=cci_t,
                 d_pair=d_pair, d_row=d_row, month_cum=month_cum,
                 tier_bounds=arrays.tier_bounds,
-                routing_idx=routing_idx if topology else None,
+                routing_idx=routing.primary if topology else None,
                 pred_t=pred_t if pred_source is not None else None,
             )
             if drain:
@@ -379,7 +388,7 @@ def _build_step_many(
     is property-tested in ``tests/test_fleet_runtime.py``.
     """
 
-    def step_many(arrays, policy, fc, fsm, ssm_h, t, routing_idx, ring,
+    def step_many(arrays, policy, fc, fsm, ssm_h, t, routing, ring,
                   hist_edges, hpm, seq, demand_block):
         f = jnp.result_type(float)
         P = (arrays.pair_capacity if topology else arrays.capacity).shape[0]
@@ -455,21 +464,28 @@ def _build_step_many(
             prev_b = bounds[:, j]
         if topology:
             vpn_pair = arrays.L_vpn[None, :] + vpn_transfer   # (K, P)
+            # Same leg-list aggregation as the per-tick step, vmapped over
+            # the chunk's K hour planes (each hour is the identical
+            # per-element gather/weight/segment chain — bit parity holds).
+            lp, lm = routing.leg_pair, routing.leg_port
+            vw, aw = routing.vpn_w, routing.attach_w
             seg = jax.vmap(
-                lambda v: jax.ops.segment_sum(v, routing_idx, num_segments=M)
+                lambda v: jax.ops.segment_sum(v, lm, num_segments=M)
             )
-            vpn_t = seg(vpn_pair)                             # (K, M)
+            vpn_t = seg(vpn_pair[:, lp] * vw[None, :])        # (K, M)
             d_bill = jnp.minimum(
-                seg(d_cci_raw), arrays.port_capacity[None, :]
+                seg(d_cci_raw[:, lp] * aw[None, :]),
+                arrays.port_capacity[None, :],
             )
-            n_pairs = jax.ops.segment_sum(
-                jnp.ones(P, f), routing_idx, num_segments=M
-            )                                                 # (M,)
+            n_pairs = jax.ops.segment_sum(aw, lm, num_segments=M)  # (M,)
             cci_t = (
                 arrays.L_cci[None, :] + arrays.V_cci[None, :] * n_pairs[None, :]
                 + arrays.c_cci[None, :] * d_bill
             )
-            d_row = jnp.minimum(seg(d_pair), arrays.port_capacity[None, :])
+            d_row = jnp.minimum(
+                seg(d_pair[:, lp] * aw[None, :]),
+                arrays.port_capacity[None, :],
+            )
         else:
             vpn_t = arrays.L_vpn[None, :] + vpn_transfer
             cci_t = (
@@ -553,7 +569,7 @@ def _build_step_many(
                     cci_t=x["cci_t"], d_pair=x["d_pair"],
                     d_row=x["d_row_obs"], month_cum=x["month_cum"],
                     tier_bounds=arrays.tier_bounds,
-                    routing_idx=routing_idx if topology else None,
+                    routing_idx=routing.primary if topology else None,
                     pred_t=pred_t,
                 )
             return (fsm, ssm_h, ring, pred_live), ys_t
@@ -607,6 +623,10 @@ class ResolvedRuntime:
     pred_source: Optional[str]    # None | "replay" | "live"
     fc: Optional[dict]            # live-forecaster device params, or None
     hours_per_month: int
+    routing_plan: Optional[RoutingPlan] = None  # the typed plan behind
+                                  # arrays.routing in topology mode (None
+                                  # for pre-stacked arrays — reconstructed
+                                  # from the operand legs downstream)
 
 
 def resolve_runtime_operands(spec, config: RuntimeConfig) -> ResolvedRuntime:
@@ -618,6 +638,7 @@ def resolve_runtime_operands(spec, config: RuntimeConfig) -> ResolvedRuntime:
         kind = "reactive"
         hours_per_month = int(config.hours_per_month)
         resolved_spec = None
+        routing_plan = None
         routing = config.routing
         if isinstance(spec, FleetSpec):
             hours_per_month = spec.hours_per_month
@@ -631,7 +652,11 @@ def resolve_runtime_operands(spec, config: RuntimeConfig) -> ResolvedRuntime:
                 "cannot co-optimize it online; run optimize_routing first)"
             )
             resolved_spec = spec
-            arrays = spec.stack(routing, jnp.float64)
+            routing_plan = as_routing_plan(
+                routing, n_ports=spec.n_ports,
+                context="FleetRuntime(routing=)",
+            )
+            arrays = spec.stack(routing_plan, jnp.float64)
         else:
             assert routing is None, "pre-stacked arrays already carry a routing"
             arrays = spec
@@ -677,6 +702,7 @@ def resolve_runtime_operands(spec, config: RuntimeConfig) -> ResolvedRuntime:
         pred_source=pred_source,
         fc=fc,
         hours_per_month=int(hours_per_month),
+        routing_plan=routing_plan,
     )
 
 
@@ -743,7 +769,7 @@ class FleetRuntime:
             self._spec = ops.spec
             self.topology = ops.topology
             self.arrays = ops.arrays
-            self._set_routing_caches()
+            self._set_routing_caches(ops.routing_plan)
             self.policy = ops.policy
             self.pred_source = ops.pred_source
             self._fc = ops.fc
@@ -788,16 +814,31 @@ class FleetRuntime:
             obs=config.obs,
         )
 
-    def _set_routing_caches(self) -> None:
-        """Host/device twins of ``arrays.routing`` (the single source): the
-        int32 index vector the tick aggregates with, its numpy copy for
-        modes()/sync-group mapping, and per-port occupancy counts — all
-        derived ONCE per (re)routing, never per tick."""
+    def _set_routing_caches(self, plan: Optional[RoutingPlan] = None) -> None:
+        """Host twins of ``arrays.routing`` (the single source): the typed
+        :class:`RoutingPlan` behind the stacked leg operand, the (P,)
+        first-hop index vector modes()/sync-group mapping consume, and the
+        (M, P) membership matrix — all derived ONCE per (re)routing, never
+        per tick. ``plan`` short-circuits the leg decode when the caller
+        already holds the typed plan (construction from a spec, reroute)."""
         if not self.topology:
+            self.routing_plan = None
             self._routing_np = self._routing_idx = self._routing_idx_np = None
             return
-        self._routing_np = np.asarray(self.arrays.routing)
-        self._routing_idx_np = np.argmax(self._routing_np, axis=0)
+        if plan is None:
+            # Pre-stacked arrays: the operand legs ARE the routing; decode
+            # them back into the typed host view (tree_rows provenance is
+            # not recoverable from weights alone, which only matters for
+            # report labelling — the tick consumes the legs either way).
+            plan = RoutingPlan.from_operand(
+                self.arrays.routing, self.n_rows
+                if hasattr(self, "n_rows")
+                else int(np.asarray(self.arrays.toggle.theta1).shape[0]),
+                provenance="from_operand:FleetRuntime",
+            )
+        self.routing_plan = plan
+        self._routing_np = plan.matrix
+        self._routing_idx_np = plan.primary
         self._routing_idx = jnp.asarray(self._routing_idx_np, jnp.int32)
 
     def _step_fn(self, endo: bool, drain: bool = False):
@@ -880,7 +921,6 @@ class FleetRuntime:
             ssm_h=ssm_h,
             t_dev=t_dev,
             routing=self.arrays.routing if self.topology else None,
-            routing_idx=self._routing_idx,
             dcum=z(P),
             dcum_month=z(P),
             vpn_pref=z(M),
@@ -934,7 +974,7 @@ class FleetRuntime:
         with enable_x64():
             fsm, ssm_h, t_dev, ring, packed_out = self._step_fn(endo, drain)(
                 self.arrays, self.policy, self._fc, st.fsm, st.ssm_h,
-                st.t_dev, st.routing_idx, st.metrics, self._obs_edges,
+                st.t_dev, st.routing, st.metrics, self._obs_edges,
                 jax.device_put(packed_in),
             )
         po = np.asarray(packed_out)
@@ -1073,7 +1113,7 @@ class FleetRuntime:
         with enable_x64():
             fsm, ssm_h, t_dev, ring, seq, planes, drain_vec = fn(
                 self.arrays, self.policy, self._fc, st.fsm, st.ssm_h,
-                st.t_dev, st.routing_idx, st.metrics, self._obs_edges,
+                st.t_dev, st.routing, st.metrics, self._obs_edges,
                 self._hpm_dev, self._device_seq(), jax.device_put(block),
             )
         self._dev_seq = seq
@@ -1150,11 +1190,15 @@ class FleetRuntime:
         }
 
     def reroute(self, routing) -> None:
-        """Swap the pair→port routing MID-STREAM (topology mode only).
+        """Swap the row→port routing MID-STREAM (topology mode only).
 
-        ``routing`` is (P,) candidate-port indices (validated against the
-        spec when the runtime was built from one) or a pre-built (M, P)
-        one-hot matrix. The swap is a pure operand change on the carried
+        ``routing`` is a :class:`repro.fleet.routing.RoutingPlan` — any hop
+        depth or tree shape whose padded leg bound fits the one the stream
+        was compiled with (``plan.total_hops <= n_legs`` at construction;
+        a larger plan raises :class:`ValueError` rather than silently
+        recompiling). Legacy bare ``(P,)`` index vectors and ``(M, P)``
+        one-hot matrices keep working through the :func:`as_routing_plan`
+        deprecation shim. The swap is a pure operand change on the carried
         :class:`RuntimeState`: the compiled tick is reused, and every piece
         of carried state — FSM carries, float64 prefix rings (so window
         sums near the swap mix old- and new-routing hours, as a live system
@@ -1175,31 +1219,33 @@ class FleetRuntime:
         )
         old_idx = self._routing_idx_np.copy()
         M, P = self.n_rows, self.n_demand_rows
-        r = np.asarray(routing)
         with enable_x64():
-            if r.ndim == 2:
-                assert r.shape == (M, P), (r.shape, (M, P))
-                assert np.all(r.sum(axis=0) == 1.0) and set(
-                    np.unique(r)
-                ) <= {0.0, 1.0}, "routing must be one-hot per pair"
-                r = np.argmax(r, axis=0)  # validate as indices below
+            plan = as_routing_plan(
+                routing, n_ports=M, context="FleetRuntime.reroute"
+            )
+            assert plan.n_rows == P, (
+                f"plan routes {plan.n_rows} rows, stream carries {P}"
+            )
             if self._spec is not None:
-                r = self._spec.validate_routing(r)
-            else:
-                assert np.all((0 <= r) & (r < M)), (
-                    f"routing indices must lie in [0, {M}) — got "
-                    f"{r.min()}..{r.max()} (negative indices would wrap)"
+                self._spec.validate_plan(plan)
+            E = int(self.arrays.routing.leg_pair.shape[-1])
+            if plan.total_hops > E:
+                raise ValueError(
+                    f"plan needs {plan.total_hops} legs but the stream was "
+                    f"compiled with a padded bound of {E} — rerouting at a "
+                    "deeper bound would recompile the tick. Construct the "
+                    "runtime with a routing pad_to()'d to the maximum hop "
+                    "budget you plan to swap in."
                 )
-            from .topology import routing_matrix
-
-            R = routing_matrix(r, M, jnp.float64)
-        self.arrays = self.arrays._replace(routing=R)  # keep views coherent
-        self._set_routing_caches()
-        self._state = self._state._replace(
-            routing=R, routing_idx=self._routing_idx
-        )
+            plan = plan.pad_to(E)
+            op = plan.operand(jnp.float64)
+        self.arrays = self.arrays._replace(routing=op)  # keep views coherent
+        self._set_routing_caches(plan)
+        self._state = self._state._replace(routing=op)
         if self.obs is not None:
-            self.obs.record_reroute(self.t, old_idx, self._routing_idx_np)
+            self.obs.record_reroute(
+                self.t, old_idx, self._routing_idx_np, plan=self.routing_plan
+            )
 
     # --- observability surface (only when built with obs=) ------------------
 

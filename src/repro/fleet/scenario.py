@@ -34,7 +34,13 @@ from repro.traffic.puffer import puffer_trace
 from repro.traffic.traces import bursty_trace, constant_trace
 
 from .spec import FleetSpec, LinkSpec
-from .topology import PairSpec, PortSpec, TopologySpec
+from .topology import (
+    MulticastSpec,
+    PairSpec,
+    PathSpec,
+    PortSpec,
+    TopologySpec,
+)
 
 GB_PER_GBPS_HOUR = 450.0  # 1 Gbps sustained for one hour = 450 GB
 
@@ -437,4 +443,139 @@ def build_reroute_scenario(
     demand[:, :shift_hour] = before[:, None]
     demand[:, shift_hour:] = after[:, None]
     demand *= rng.uniform(0.97, 1.03, size=demand.shape)  # mild jitter
+    return TopologyScenario(topo=topo, demand=demand, horizon=horizon)
+
+
+# ---------------------------------------------------------------------------
+# Multi-hop relay and multicast scenarios (overlay routing / replication)
+# ---------------------------------------------------------------------------
+
+
+def broadcast_burst_trace(
+    horizon: int,
+    n_groups: int = 1,
+    *,
+    period: int = 168,
+    burst_hours: int = 8,
+    base_gb_hr: float = 25.0,
+    burst_gb: float = 20_000.0,
+    seed: int = 0,
+) -> np.ndarray:
+    """(T, n_groups) replication-push demand: model-weight / CDN-fill drops.
+
+    Each group idles at ``base_gb_hr`` (config churn, telemetry) and every
+    ``period`` hours pushes a ``burst_gb`` artifact spread evenly over
+    ``burst_hours`` — the point-to-multipoint workload a forwarding tree
+    serves with ONE copy per shared edge. Drop phases are jittered per
+    group so a portfolio of groups doesn't burst in lockstep.
+    """
+    assert horizon >= 1 and n_groups >= 0 and 1 <= burst_hours <= period
+    rng = np.random.default_rng(seed)
+    cols = np.full((horizon, n_groups), base_gb_hr)
+    rate = burst_gb / burst_hours
+    for g in range(n_groups):
+        start = int(rng.integers(0, period))
+        for t0 in range(start, horizon, period):
+            t1 = min(t0 + burst_hours, horizon)
+            cols[t0:t1, g] += rate * float(rng.uniform(0.9, 1.1))
+    return cols
+
+
+def build_relay_scenario(
+    *, horizon: int = 2000, seed: int = 0, long_gb_hr: float = 800.0
+) -> TopologyScenario:
+    """A multi-hop overlay-routing scenario: the relay detour wins.
+
+    Three ports, three demand rows. Two cheap ``hub`` ports (dedicated-link
+    unit economics, $0.002/GB) are each pinned ON by an ``anchor`` pair;
+    the ``direct`` port serving the long intercontinental pair charges a
+    10x+ transfer premium ($0.025/GB) and a lease nobody else shares. The
+    ``long`` row is a :class:`PathSpec` that may EITHER lease the direct
+    port 1-hop OR compose the two already-hot hubs as a 2-hop relay path
+    (CloudCast-style overlay detour): per hop it pays only the marginal
+    attachment + cheap per-GB rate, and the hub leases are already bought.
+    The hop-aware :func:`repro.fleet.topology.optimize_routing` takes the
+    relay; restricting it to ``max_hops=1`` forces the premium port — the
+    measured ``relay_savings`` gap ``build_topology_report`` reports and
+    the topology bench gates.
+    """
+    from repro.core.pricing import flat_rate
+
+    rng = np.random.default_rng(seed)
+    mk_port = lambda name, fac, c_gb: PortSpec(
+        name=name, facility=fac, cloud="aws",
+        L_cci=4.55, V_cci=0.1, c_cci=c_gb,
+        capacity_gb_hr=port_capacity_gb_hr(),
+        D=48, T_cci=168, h=96, theta1=0.9, theta2=1.1,
+    )
+    mk_pair = lambda name, cands: PairSpec(
+        name=name, src="gcp", dst="aws", L_vpn=0.105,
+        vpn_tier=flat_rate(0.08),
+        capacity_gb_hr=vlan_access_gb_hr(10),
+        candidates=cands, family="constant",
+    )
+    topo = TopologySpec(
+        ports=(mk_port("hub-a-p0", "fac-hub-a", 0.002),
+               mk_port("hub-b-p0", "fac-hub-b", 0.002),
+               mk_port("direct-p0", "fac-direct", 0.025)),
+        pairs=(mk_pair("anchor-a", (0,)),
+               mk_pair("anchor-b", (1,)),
+               PathSpec(
+                   name="long", src="gcp", dst="aws", L_vpn=0.105,
+                   vpn_tier=flat_rate(0.08),
+                   capacity_gb_hr=vlan_access_gb_hr(10),
+                   candidates=(2,), relays=((0, 1),), family="constant",
+               )),
+    )
+    demand = np.empty((3, horizon))
+    demand[0] = 1800.0
+    demand[1] = 1800.0
+    demand[2] = long_gb_hr
+    demand *= rng.uniform(0.97, 1.03, size=demand.shape)  # mild jitter
+    return TopologyScenario(topo=topo, demand=demand, horizon=horizon)
+
+
+def build_multicast_scenario(
+    *, n_leaves: int = 4, horizon: int = 2000, seed: int = 0
+) -> TopologyScenario:
+    """A point-to-multipoint scenario: the forwarding tree's shared edge
+    beats the per-leaf unicast expansion.
+
+    One cheap ``hub`` port every leaf can reach (kept warm by an anchor
+    pair) plus one pricier local port per leaf. The broadcast-burst group
+    routed as a tree attaches the hub ONCE and its burst bytes are charged
+    once; the unicast expansion pays ``n_leaves`` attachments and bills the
+    same bytes ``n_leaves`` times — the ``tree_sharing_savings`` gap the
+    report layer measures and ``examples/multicast_demo.py`` demos.
+    """
+    from repro.core.pricing import flat_rate
+
+    assert n_leaves >= 1
+    rng = np.random.default_rng(seed)
+    mk_port = lambda name, fac, c_gb: PortSpec(
+        name=name, facility=fac, cloud="aws",
+        L_cci=4.55, V_cci=0.1, c_cci=c_gb,
+        capacity_gb_hr=port_capacity_gb_hr(100.0),
+        D=48, T_cci=168, h=96, theta1=0.9, theta2=1.1,
+    )
+    ports = [mk_port("hub-p0", "fac-hub", 0.004)] + [
+        mk_port(f"leaf{j}-p0", f"fac-leaf{j}", 0.02) for j in range(n_leaves)
+    ]
+    anchor = PairSpec(
+        name="anchor", src="gcp", dst="aws", L_vpn=0.105,
+        vpn_tier=flat_rate(0.08),
+        capacity_gb_hr=vlan_access_gb_hr(10),
+        candidates=(0,), family="constant",
+    )
+    group = MulticastSpec(
+        name="weights-push", src="gcp",
+        leaves=tuple(f"aws-leaf{j}" for j in range(n_leaves)),
+        leaf_candidates=tuple((0, 1 + j) for j in range(n_leaves)),
+        L_vpn=0.105, vpn_tier=flat_rate(0.08),
+        capacity_gb_hr=vlan_access_gb_hr(10),
+    )
+    topo = TopologySpec(ports=tuple(ports), pairs=(anchor,), groups=(group,))
+    demand = np.empty((2, horizon))
+    demand[0] = 1500.0 * rng.uniform(0.97, 1.03, size=horizon)
+    demand[1] = broadcast_burst_trace(horizon, 1, seed=seed + 1)[:, 0]
     return TopologyScenario(topo=topo, demand=demand, horizon=horizon)

@@ -43,6 +43,7 @@ import jax.numpy as jnp
 from jax.experimental import enable_x64
 
 from repro.core.planner import collective_mode
+from repro.fleet.routing import as_routing_plan, padded_operand_np
 from repro.fleet.runtime import (
     RuntimeConfig,
     _build_step,
@@ -167,8 +168,11 @@ class _Bucket:
             self.fsm = jax.tree.map(tile, fsm_one)
             self.t_dev = jnp.zeros((n_slots,), jnp.int32)
             self.ssm_h = jnp.zeros((n_slots, m, 0), jnp.float32)
-            self.routing_idx = (
-                tile(jnp.asarray(packed.routing_idx, jnp.int32))
+            # The pooled routing operand: each RoutingOperand field tiled
+            # with a leading slot axis ((S, legs_cap) legs, (S, pairs_cap)
+            # primary) — reroute() swaps ONE slot's rows, never the stack.
+            self.routing = (
+                jax.tree.map(lambda x: tile(jnp.asarray(x)), packed.routing)
                 if key.topology else None
             )
             self.alive_dev = jnp.zeros((n_slots,), jnp.float64)
@@ -234,9 +238,11 @@ class _Bucket:
             fsm_one = jax.vmap(lambda q: q.init_carry())(packed.policy)
             self.fsm = set_slot(self.fsm, s, fsm_one)
             self.t_dev = self.t_dev.at[s].set(0)
-            if self.routing_idx is not None:
-                self.routing_idx = self.routing_idx.at[s].set(
-                    jnp.asarray(packed.routing_idx, jnp.int32)
+            if self.routing is not None:
+                self.routing = set_slot(
+                    self.routing,
+                    s,
+                    jax.tree.map(jnp.asarray, packed.routing),
                 )
             self.alive_dev = self.alive_dev.at[s].set(1.0)
             if self.ring is not None:
@@ -255,8 +261,8 @@ class _Bucket:
         self.ensure_T(d.shape[1])
         self.demand[s] = 0.0
         self.demand[s, : d.shape[0], : d.shape[1]] = d
-        if packed.routing_idx is not None:
-            self.routing_idx_np[s] = packed.routing_idx
+        if packed.routing is not None:
+            self.routing_idx_np[s] = packed.routing.primary
         self.slots[s] = name
         self._dev_seq = None
 
@@ -402,13 +408,13 @@ class FleetGateway:
             )
             edges = self._edges
 
-            def mega(arrays, policy, fsm, ssm_h, t, routing_idx, ring,
+            def mega(arrays, policy, fsm, ssm_h, t, routing, ring,
                      alive, packed):
                 def one(a, q, f, s, tt, ri, rg, pk):
                     return step(a, q, None, f, s, tt, ri, rg, edges, pk)
 
                 fsm, ssm_h, t1, ring, out = jax.vmap(one)(
-                    arrays, policy, fsm, ssm_h, t, routing_idx, ring, packed
+                    arrays, policy, fsm, ssm_h, t, routing, ring, packed
                 )
                 # Alive-bitmap mask: dead slots emit exact zeros; x1.0 is
                 # bitwise identity for live slots.
@@ -462,7 +468,7 @@ class FleetGateway:
         with enable_x64():
             b.fsm, b.ssm_h, b.t_dev, b.ring, po = fn(
                 b.arrays, b.policy, b.fsm, b.ssm_h, b.t_dev,
-                b.routing_idx, b.ring, b.alive_dev,
+                b.routing, b.ring, b.alive_dev,
                 jax.device_put(packed_in),
             )
         po = np.asarray(po)
@@ -524,14 +530,14 @@ class FleetGateway:
             )
             edges = self._edges
 
-            def mega(arrays, policy, fsm, ssm_h, t, routing_idx, ring,
+            def mega(arrays, policy, fsm, ssm_h, t, routing, ring,
                      alive, hpm, seq, blocks):
                 def one(a, q, f, s, tt, ri, rg, hp, sq, bk):
                     return chunk(a, q, None, f, s, tt, ri, rg, edges,
                                  hp, sq, bk)
 
                 fsm, ssm_h, t1, ring, seq, ys, dv = jax.vmap(one)(
-                    arrays, policy, fsm, ssm_h, t, routing_idx, ring,
+                    arrays, policy, fsm, ssm_h, t, routing, ring,
                     hpm, seq, blocks
                 )
                 # Alive-bitmap mask over each (n_slots, K, rows) plane.
@@ -641,7 +647,7 @@ class FleetGateway:
         with enable_x64():
             b.fsm, b.ssm_h, b.t_dev, b.ring, seq, ys, dv = fn(
                 b.arrays, b.policy, b.fsm, b.ssm_h, b.t_dev,
-                b.routing_idx, b.ring, b.alive_dev, hpm_dev, seq,
+                b.routing, b.ring, b.alive_dev, hpm_dev, seq,
                 jax.device_put(blocks),
             )
         b._dev_seq = (hpm_dev, seq)
@@ -816,9 +822,12 @@ class FleetGateway:
         return probe
 
     def reroute(self, name: str, routing) -> None:
-        """Swap one tenant's pair→port routing mid-stream — the standalone
+        """Swap one tenant's row→port routing mid-stream — the standalone
         :meth:`FleetRuntime.reroute` contract, as one ``.at[slot]`` operand
-        write into the pooled index stack (never a recompile)."""
+        write into the pooled leg stack (never a recompile). ``routing`` is
+        a :class:`~repro.fleet.routing.RoutingPlan` whose legs fit the
+        tenant's bucketed leg capacity; legacy bare index vectors and
+        one-hot matrices keep working through the deprecation shim."""
         handle = self._tenants[name]
         assert handle.status == "active", (name, handle.status)
         assert handle.key.topology, (
@@ -828,26 +837,30 @@ class FleetGateway:
         s = handle.slot
         resolved = self._resolved[name]
         m, p = int(b.m[s]), int(b.p[s])
-        r = np.asarray(routing)
         with enable_x64():
-            if r.ndim == 2:
-                assert r.shape == (m, p), (r.shape, (m, p))
-                assert np.all(r.sum(axis=0) == 1.0) and set(
-                    np.unique(r)
-                ) <= {0.0, 1.0}, "routing must be one-hot per pair"
-                r = np.argmax(r, axis=0)
-            if resolved.spec is not None:
-                r = resolved.spec.validate_routing(r)
-            else:
-                assert np.all((0 <= r) & (r < m)), r
-            idx = np.concatenate([
-                np.asarray(r, np.int64),
-                np.full(b.key.pairs_cap - p, b.key.rows_cap - 1, np.int64),
-            ])
-            b.routing_idx = b.routing_idx.at[s].set(
-                jnp.asarray(idx, jnp.int32)
+            plan = as_routing_plan(
+                routing, n_ports=m, context="FleetGateway.reroute"
             )
-        b.routing_idx_np[s] = idx
+            assert plan.n_rows == p, (
+                f"plan routes {plan.n_rows} rows, tenant carries {p}"
+            )
+            if resolved.spec is not None:
+                resolved.spec.validate_plan(plan)
+            if plan.total_hops > b.key.legs_cap:
+                raise ValueError(
+                    f"plan needs {plan.total_hops} legs but tenant "
+                    f"{name!r} is bucketed at legs_cap={b.key.legs_cap} — "
+                    "a deeper swap budget needs a resize() into a larger "
+                    "bucket"
+                )
+            op = padded_operand_np(
+                plan, n_legs=b.key.legs_cap, n_rows=b.key.pairs_cap,
+                pad_pair=b.key.pairs_cap - 1, pad_port=b.key.rows_cap - 1,
+            )
+            b.routing = set_slot(
+                b.routing, s, jax.tree.map(jnp.asarray, op)
+            )
+        b.routing_idx_np[s] = op.primary
 
     # --- queries -----------------------------------------------------------
 

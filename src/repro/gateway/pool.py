@@ -24,10 +24,11 @@ margin makes the forecast gates compare ``exp(0)`` against itself — so
 padded FSMs stay OFF forever, contribute zero to every cost/volume
 reduction, and never pollute a real tenant's metrics counters (the one
 exception, the realized-cost histogram's zero-bin, is corrected host-side
-at drain — see :mod:`repro.gateway.gateway`). Padded PAIRS are routed to a
-padded PORT appended after all real rows, so ``segment_sum`` aggregation
-onto real ports sees exactly the standalone pair order (ascending, same
-set) — the property PR 5 established bitwise.
+at drain — see :mod:`repro.gateway.gateway`). Padded routing LEGS point at
+an inert (pad pair, pad port) slot with zero weights, and padded PAIRS
+carry no legs at all, so ``segment_sum`` aggregation onto real ports sees
+exactly the standalone leg list in the standalone (leg) order — the
+property PR 5 established bitwise, generalized to weighted multi-hop legs.
 
 Forecast ``pred_demand`` columns are padded by EDGE-REPLICATING the last
 column, matching XLA's clamping ``dynamic_index_in_dim`` semantics in the
@@ -51,6 +52,7 @@ from repro.fleet.policy import (
     HysteresisPolicy,
     ReactivePolicy,
 )
+from repro.fleet.routing import RoutingOperand, RoutingPlan, padded_operand_np
 from repro.fleet.runtime import ResolvedRuntime
 from repro.fleet.spec import PAD_BOUND, FleetArrays
 from repro.fleet.topology import TopologyArrays
@@ -85,6 +87,11 @@ class BucketKey(NamedTuple):
     topology: bool
     rows_cap: int        # decision rows (ports/links), padded
     pairs_cap: int       # demand rows (pairs; == rows_cap in fleet mode)
+    legs_cap: int        # padded routing-leg bound (0 in fleet mode) — a
+                         # 1-hop tenant's tight bound pow2-pads to exactly
+                         # pairs_cap, so plain tenants never fragment; a
+                         # relay/multicast tenant with more legs buckets by
+                         # its own leg capacity
     n_tiers: int         # EXACT tier depth K (never padded cross-tenant)
     policy_treedef: object
     pred_source: Optional[str]   # None | "replay" (live is not poolable)
@@ -98,9 +105,9 @@ class BucketKey(NamedTuple):
         # ``chunk`` is the static K of a chunked mega-tick (tick_many);
         # ``None`` is the per-tick variant — distinct compiled programs.
         return (
-            self.topology, self.rows_cap, self.pairs_cap, self.n_tiers,
-            self.policy_treedef, self.pred_source, self.pred_cap,
-            n_slots, obs, drain, chunk,
+            self.topology, self.rows_cap, self.pairs_cap, self.legs_cap,
+            self.n_tiers, self.policy_treedef, self.pred_source,
+            self.pred_cap, n_slots, obs, drain, chunk,
         )
 
 
@@ -111,7 +118,8 @@ class PackedTenant:
     key: BucketKey
     arrays: object                    # padded FleetArrays / TopologyArrays
     policy: object                    # padded policy pytree (rows_cap leaves)
-    routing_idx: Optional[np.ndarray] # (pairs_cap,) int32, topology only
+    routing: Optional[RoutingOperand] # numpy-field leg operand padded to
+                                      # (legs_cap, pairs_cap), topology only
     h_np: np.ndarray                  # (rows_cap,) int64 padded window lengths
     hours_per_month: int
     n_rows: int                       # real decision rows
@@ -197,6 +205,12 @@ def bucket_key_for(resolved: ResolvedRuntime) -> BucketKey:
         # Padded pairs need a padded port to route to (a real port's
         # n_pairs count must not see them) — reserve one by doubling.
         rows_cap *= 2
+    legs_cap = 0
+    if resolved.topology:
+        # The stacked operand's padded leg bound is the tenant's own swap
+        # budget; every row carries >= 1 leg so the pow2 bound is at least
+        # pairs_cap for plain 1-hop tenants (no fragmentation).
+        legs_cap = ceil_pow2(int(arrays.routing.leg_pair.shape[-1]))
     pred_cap = 0
     if resolved.pred_source == "replay":
         pred_cap = ceil_pow2(resolved.policy.pred_demand.shape[1])
@@ -205,6 +219,7 @@ def bucket_key_for(resolved: ResolvedRuntime) -> BucketKey:
         topology=resolved.topology,
         rows_cap=rows_cap,
         pairs_cap=pairs_cap,
+        legs_cap=legs_cap,
         n_tiers=int(k),
         policy_treedef=jax.tree.structure(resolved.policy),
         pred_source=resolved.pred_source,
@@ -228,15 +243,22 @@ def _pack_tenant(resolved: ResolvedRuntime, key: BucketKey) -> PackedTenant:
     mc, pc = key.rows_cap, key.pairs_cap
     if resolved.topology:
         m, p = arrays.n_ports, arrays.n_pairs
-        routing_idx = np.argmax(np.asarray(arrays.routing), axis=0)
-        # Padded pairs ride a padded port APPENDED after every real row, so
-        # real ports aggregate exactly the standalone pair set in the
-        # standalone (ascending) order.
+        plan = resolved.routing_plan
+        if plan is None:
+            plan = RoutingPlan.from_operand(
+                arrays.routing, m, provenance="from_operand:gateway"
+            )
+        # Padding legs point at the pool's inert (pad_pair, pad_port) slot
+        # with zero weights (exact +0.0 in every segment sum), and padded
+        # PAIRS carry no legs at all — real ports aggregate exactly the
+        # standalone leg list in the standalone (leg) order. The padded
+        # primary still maps padded pairs to the pad port for the obs ring.
         pad_port = mc - 1
         assert p == pc or pad_port >= m, (m, p, key)
-        routing_idx = np.concatenate([
-            routing_idx, np.full(pc - p, pad_port, routing_idx.dtype)
-        ]).astype(np.int32)
+        routing = padded_operand_np(
+            plan, n_legs=key.legs_cap, n_rows=pc,
+            pad_pair=pc - 1, pad_port=pad_port,
+        )
         padded = TopologyArrays(
             L_cci=_pad_rows(arrays.L_cci, mc, 0.0),
             V_cci=_pad_rows(arrays.V_cci, mc, 0.0),
@@ -247,15 +269,14 @@ def _pack_tenant(resolved: ResolvedRuntime, key: BucketKey) -> PackedTenant:
             tier_bounds=_pad_rows(arrays.tier_bounds, pc, PAD_BOUND),
             tier_rates=_pad_rows(arrays.tier_rates, pc, 0.0),
             pair_capacity=_pad_rows(arrays.pair_capacity, pc, PAD_BOUND),
-            # The tick aggregates through routing_idx, never this matrix;
-            # pools keep a rank-preserving dummy rather than S dense
-            # one-hots (reroute() then swaps one (pairs_cap,) row, not an
-            # (rows_cap × pairs_cap) slab).
-            routing=jnp.zeros((1, 1), jnp.asarray(arrays.routing).dtype),
+            # The tick aggregates through the pooled leg operand, never
+            # this field; pools keep a rank-preserving dummy rather than S
+            # stacked operands (reroute() then swaps one slot's leg rows).
+            routing=jnp.zeros((1, 1), arrays.routing.attach_w.dtype),
         )
     else:
         m = p = arrays.n_links
-        routing_idx = None
+        routing = None
         padded = FleetArrays(
             L_cci=_pad_rows(arrays.L_cci, mc, 0.0),
             V_cci=_pad_rows(arrays.V_cci, mc, 0.0),
@@ -274,7 +295,7 @@ def _pack_tenant(resolved: ResolvedRuntime, key: BucketKey) -> PackedTenant:
         key=key,
         arrays=padded,
         policy=policy,
-        routing_idx=routing_idx,
+        routing=routing,
         h_np=np.asarray(np.concatenate([
             np.asarray(arrays.toggle.h, np.int64),
             np.ones(mc - m, np.int64),

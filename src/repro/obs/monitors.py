@@ -188,8 +188,10 @@ class DivergenceMonitor:
         self.demand: List[np.ndarray] = []
         self.x: List[np.ndarray] = []
         self.state: List[np.ndarray] = []
+        # Schedule segments carry the typed RoutingPlan (multi-hop/tree
+        # aware); the offline oracle normalizes each segment itself.
         self.schedule = (
-            [(0, runtime._routing_idx_np.copy())] if runtime.topology else None
+            [(0, runtime.routing_plan)] if runtime.topology else None
         )
         self.checks = 0
 
@@ -212,9 +214,11 @@ class DivergenceMonitor:
         self.x.append(np.asarray(out["x"], np.int8))
         self.state.append(np.asarray(out["state"], np.int8))
 
-    def on_reroute(self, t: int, new_idx: np.ndarray) -> None:
+    def on_reroute(self, t: int, new_routing) -> None:
+        """``new_routing`` is the RoutingPlan now in effect (a bare index
+        array keeps working — the oracle's normalizer accepts both)."""
         if self.schedule is not None and self.enabled:
-            self.schedule.append((int(t), np.array(new_idx)))
+            self.schedule.append((int(t), new_routing))
 
     def on_drain(self, hour: int, dm: DrainedMetrics) -> None:
         if (

@@ -306,8 +306,12 @@ class FleetObserver:
             self._guard(hour, self.regret.check, hour)
 
     def record_reroute(
-        self, t: int, old_idx: np.ndarray, new_idx: np.ndarray
+        self, t: int, old_idx: np.ndarray, new_idx: np.ndarray, plan=None
     ) -> None:
+        """``old_idx``/``new_idx`` are the (P,) first-hop views (what the
+        trace counts moves over); ``plan`` optionally carries the full
+        typed RoutingPlan so the divergence oracle replays multi-hop and
+        tree segments exactly."""
         if self.trace is not None:
             self.trace.instant(
                 t, "reroute",
@@ -315,7 +319,9 @@ class FleetObserver:
                 pairs=int(new_idx.shape[0]),
             )
         if self.divergence is not None:
-            self.divergence.on_reroute(t, new_idx)
+            self.divergence.on_reroute(
+                t, plan if plan is not None else new_idx
+            )
 
     def record_sync_domains(self, t: int, n_domains: int, n_jobs: int) -> None:
         if self.trace is not None:

@@ -258,15 +258,15 @@ def test_month_boundary_streaming():
 
 
 def _alternative_routing(topo, r0, rng, max_moved=6):
-    """A valid routing that moves a few pairs to other candidate ports."""
-    r1 = np.asarray(r0).copy()
+    """A valid RoutingPlan that moves a few pairs to other candidate ports."""
+    idx = np.asarray(r0.primary).copy()
     moved = 0
     for i, pr in enumerate(topo.pairs):
-        others = [c for c in pr.candidates if c != r0[i]]
+        others = [c for c in pr.candidates if c != idx[i]]
         if others and moved < max_moved and rng.random() < 0.8:
-            r1[i] = int(rng.choice(others))
+            idx[i] = int(rng.choice(others))
             moved += 1
-    return r1, moved
+    return topo.plan(idx), moved
 
 
 @given(seed=st.integers(0, 10_000))
@@ -459,7 +459,7 @@ def test_reroute_guards_and_modes_mapping():
     from repro.fleet.plan import build_reroute_scenario
 
     sc = build_reroute_scenario(horizon=300, shift_hour=150, seed=0)
-    rt = FleetRuntime(sc.topo, routing=[0, 0, 1])
+    rt = FleetRuntime(sc.topo, routing=sc.topo.plan([0, 0, 1]))
     out = rt.step(sc.demand[:, 0])
     modes = rt.modes(out)
     assert len(modes) == 3  # per PAIR, not per port
@@ -468,14 +468,17 @@ def test_reroute_guards_and_modes_mapping():
 
     assert modes == [collective_mode(int(states[m])) for m in (0, 0, 1)]
     np.testing.assert_array_equal(rt.port_occupancy(), [2.0, 1.0])
-    rt.reroute([0, 0, 0])
+    rt.reroute(sc.topo.plan([0, 0, 0]))
     np.testing.assert_array_equal(rt.port_occupancy(), [3.0, 0.0])
-    with pytest.raises(AssertionError, match="non-candidate"):
+    with pytest.raises(AssertionError, match="non-candidate"), \
+            pytest.warns(DeprecationWarning):
         rt.reroute([1, 0, 0])  # pair 0's only candidate is port 0
-    with pytest.raises(AssertionError, match="non-candidate"):
-        # The matrix form goes through the SAME candidate validation.
+    with pytest.raises(AssertionError, match="non-candidate"), \
+            pytest.warns(DeprecationWarning):
+        # The legacy matrix form goes through the SAME candidate validation.
         rt.reroute(np.array([[0.0, 1.0, 1.0], [1.0, 0.0, 0.0]]))
-    with pytest.raises(AssertionError, match="one-hot"):
+    with pytest.raises(AssertionError, match="one-hot"), \
+            pytest.warns(DeprecationWarning):
         rt.reroute(np.ones((2, 3)))
     fleet_rt = FleetRuntime(_planner_fleet())
     with pytest.raises(AssertionError, match="topology"):
@@ -490,7 +493,7 @@ def test_reroute_demo_scenario_realizes_savings():
 
     sc = build_reroute_scenario(horizon=1400, shift_hour=500, seed=1)
     r0 = optimize_routing(sc.topo, sc.demand[:, :168])
-    assert list(r0) == [0, 0, 1]  # hub full -> hot pair spills
+    assert list(r0.primary) == [0, 0, 1]  # hub full -> hot pair spills
 
     def run(live):
         rt = FleetRuntime(sc.topo, routing=r0)
@@ -499,7 +502,7 @@ def test_reroute_demo_scenario_realizes_savings():
             if live and t > 0 and t % 24 == 0:
                 seen = sc.demand[:, max(0, t - 168):t].mean(axis=1)
                 r_new = optimize_routing(sc.topo, mean_demand=seen)
-                if not np.array_equal(r_new, rt._routing_np.argmax(axis=0)):
+                if not np.array_equal(r_new.primary, rt.routing_plan.primary):
                     rt.reroute(r_new)
             cost += float(rt.step(sc.demand[:, t])["cost"].sum())
         return cost, rt
@@ -630,7 +633,7 @@ def test_elastic_planner_per_port_topology_mode():
     )
     topo = TopologySpec(ports=(mk_port("hub", "f0"), mk_port("idle", "f1")),
                         pairs=pairs)
-    pl = ElasticFleetPlanner(topo, routing=[0, 0, 1])
+    pl = ElasticFleetPlanner(topo, routing=topo.plan([0, 0, 1]))
     assert pl.topology
     np.testing.assert_array_equal(pl.sync_groups(), [0, 0, 1])
     traffic = np.array([5e12, 5e12, 1e9])  # two hot pairs share the hub
@@ -653,7 +656,7 @@ def test_elastic_planner_per_port_topology_mode():
     shared_hour = 4.55 + 2 * 0.1 + 0.002 * (gb[0] + gb[1])
     assert pl.cost_cci_only[0] == pytest.approx(rep.hours * shared_hour, rel=1e-9)
     # Re-routing re-targets actuation next tick.
-    pl.runtime.reroute([0, 0, 0])
+    pl.runtime.reroute(topo.plan([0, 0, 0]))
     modes = pl.feed_hour(traffic)
     np.testing.assert_array_equal(pl.sync_groups(), [0, 0, 0])
     assert modes[2] == "hierarchical"  # now rides the (ON) hub port

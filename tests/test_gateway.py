@@ -83,14 +83,14 @@ def _topology_tenant(n_pairs, horizon, seed, *, policy_kind="reactive", rng=None
 
 
 def _alt_routing(topo, r0, rng):
-    r1 = np.asarray(r0).copy()
+    idx = np.asarray(r0.primary).copy()
     moved = 0
     for i, pr in enumerate(topo.pairs):
-        others = [c for c in pr.candidates if c != r0[i]]
+        others = [c for c in pr.candidates if c != idx[i]]
         if others and rng.random() < 0.8:
-            r1[i] = int(rng.choice(others))
+            idx[i] = int(rng.choice(others))
             moved += 1
-    return r1, moved
+    return topo.plan(idx), moved
 
 
 # ---------------------------------------------------------------------------
@@ -428,7 +428,7 @@ def test_sync_groups_and_tenant_labels():
     ))
     gw.tick()
     groups = gw.sync_groups("acme")
-    assert groups == [int(g) for g in np.asarray(routing)]
+    assert groups == [int(g) for g in routing.primary]
     label = sync_domain_label(groups[0], "hierarchical", tenant="acme/eu?1")
     assert label == f"syncdom_t.acme-eu-1.g{groups[0]}_hierarchical"
     m = _SYNCDOM_RE.search(f"pad {label} pad")

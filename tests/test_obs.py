@@ -338,13 +338,14 @@ def test_divergence_monitor_covers_mid_stream_reroute():
     rt = FleetRuntime(
         sc.topo, routing=r0, obs=ObsConfig(cadence=32, divergence=True)
     )
-    r1 = np.asarray(r0).copy()
+    idx = np.asarray(r0.primary).copy()
     for i, pr in enumerate(sc.topo.pairs):
-        others = [c for c in pr.candidates if c != r0[i]]
+        others = [c for c in pr.candidates if c != idx[i]]
         if others:
-            r1[i] = int(others[0])
+            idx[i] = int(others[0])
             break
-    moved = not np.array_equal(r1, np.asarray(r0))
+    moved = not np.array_equal(idx, np.asarray(r0.primary))
+    r1 = sc.topo.plan(idx)
     for t in range(sc.demand.shape[1]):
         if t == 100 and moved:
             rt.reroute(r1)

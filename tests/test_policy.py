@@ -370,9 +370,11 @@ def test_refine_routing_recovers_from_bad_routing():
     topo = _two_port_topo(c0=0.01, c1=0.2, L0=2.0, L1=20.0)
     rng = np.random.default_rng(0)
     d = rng.uniform(150, 250, size=(2, 600))
-    bad = [1, 1]
+    bad = topo.plan([1, 1])
     refined, info = refine_routing(topo, d, bad, max_moves=4)
-    assert list(refined) == [0, 0], "both pairs must migrate to the cheap port"
+    assert list(refined.primary) == [0, 0], (
+        "both pairs must migrate to the cheap port"
+    )
     assert info["cost_after"] < info["cost_before"]
     assert all(m[3] > 0 for m in info["moves"])
     replan = plan_topology(topo, d, routing=refined)
